@@ -1,0 +1,96 @@
+"""Paper Fig. 1: the 2048-core cosmology run across 3 supercomputers is only
+9% slower than the same run on one machine.
+
+Analogue: the same training step on the single-pod mesh vs the multi-pod
+mesh.  Two measurements:
+  (a) MODELED from dry-run artifacts: roofline step time single vs multi for
+      the same (arch × shape), with the cross-pod term added (WAN stage).
+  (b) MEASURED: a reduced config trained on 8 fake CPU devices arranged as
+      one "site" (1,4,2) vs two "sites" (2,2,2) — wall-clock per step.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import run_multidev
+
+_MEASURE = r"""
+import time, json
+import jax, jax.numpy as jnp
+from repro.configs import get_config, smoke_config, RunConfig, ShapeConfig, CommConfig, TrainConfig
+from repro.runtime.step import build_train_step
+from repro.models.registry import batch_concrete
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+cfg = smoke_config(get_config("llama3.2-3b"))
+out = {}
+for name, shape, axes in [("single_site", (4,2), ("data","model")),
+                          ("three_sites", (2,2,2), ("pod","data","model"))]:
+    mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,)*len(axes))
+    rc = RunConfig(model=cfg, shape=ShapeConfig("t", 64, 8, "train"),
+                   comm=CommConfig(mode="hierarchical", streams=8, chunk_mb=0.01),
+                   train=TrainConfig(zero1=True))
+    with jax.set_mesh(mesh):
+        b = build_train_step(rc, mesh)
+        state = jax.device_put(b.init_state(0), jax.tree.map(
+            lambda s: NamedSharding(mesh, s), b.state_specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        batch = jax.device_put(batch_concrete(cfg, "train", 8, 64),
+                               jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                            b.batch_specs,
+                                            is_leaf=lambda x: isinstance(x, P)))
+        state, m = b.fn(state, batch); jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(5):
+            state, m = b.fn(state, batch)
+        jax.block_until_ready(m["loss"])
+        out[name] = (time.perf_counter() - t0) / 5
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def modeled(dryrun_json: str = "results/dryrun.json",
+            arch: str = "llama3.2-3b", shape: str = "train_4k") -> str:
+    if not os.path.exists(dryrun_json):
+        return "_(dry-run results not present yet — run launch.dryrun)_"
+    with open(dryrun_json) as f:
+        data = json.load(f)
+    rows = {}
+    for r in data:
+        if (r.get("arch"), r.get("shape"), r.get("status")) == (arch, shape, "ok"):
+            rows[r["mesh"]] = r["roofline"]
+    if "single" not in rows or "multi" not in rows:
+        return f"_(need single+multi records for {arch}×{shape})_"
+    s = max(rows["single"]["compute_s"], rows["single"]["memory_s"],
+            rows["single"]["collective_s"])
+    m = max(rows["multi"]["compute_s"], rows["multi"]["memory_s"],
+            rows["multi"]["collective_s"])
+    # the global batch is fixed (weak-scaling a la Fig 1's fixed simulation):
+    # 512 chips do HALF the per-chip work of 256 chips, so the fair
+    # distributed overhead compares multi against single/2
+    ovh = (m / (s / 2) - 1.0) * 100
+    return (f"| mesh | bound step time | per-chip work |\n|---|---|---|\n"
+            f"| single-pod (256 chips) | {s*1e3:.1f} ms | 1x |\n"
+            f"| multi-pod (512 chips, WAN stage) | {m*1e3:.1f} ms | 0.5x |\n\n"
+            f"modeled distributed overhead at equal per-chip work: "
+            f"**{ovh:+.1f}%** (paper Fig. 1: +9% across 3 supercomputers)")
+
+
+def run() -> str:
+    res = run_multidev(_MEASURE, timeout=900)
+    s, t = res["single_site"], res["three_sites"]
+    parts = ["## Fig. 1 — distributed vs single-site step time", "",
+             "### Modeled (production meshes, from dry-run)", "",
+             modeled(), "",
+             "### Measured (8 fake CPU devices, reduced config)", "",
+             f"| layout | step time |\n|---|---|\n"
+             f"| one site (4x2) | {s*1e3:.0f} ms |\n"
+             f"| two sites (2x2x2) | {t*1e3:.0f} ms |", "",
+             f"measured overhead: {((t/s)-1)*100:+.1f}% "
+             f"(paper: +9%; CPU-device noise applies)", ""]
+    return "\n".join(parts)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,78 @@
+"""§Roofline report: render the dry-run JSON into the per-cell table
+(three terms, dominant bottleneck, useful-FLOPs fraction)."""
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+
+
+def render(dryrun_json: str = "results/dryrun.json", mesh: str = "single") -> str:
+    if not os.path.exists(dryrun_json):
+        return f"_missing {dryrun_json} — run `python -m repro.launch.dryrun --all`_"
+    with open(dryrun_json) as f:
+        data = json.load(f)
+    # prefer the baseline config records (hierarchical / no compress)
+    best = {}
+    for r in data:
+        if r.get("mesh") != mesh:
+            continue
+        key = (r["arch"], r["shape"])
+        if r.get("status") == "skipped":
+            best.setdefault(key, r)
+            continue
+        if r.get("status") != "ok":
+            best.setdefault(key, r)
+            continue
+        if (r.get("comm_mode"), r.get("compress")) == ("hierarchical", "none"):
+            best[key] = r
+        else:
+            best.setdefault(key, r)
+    rows = [
+        "| arch | shape | compute | memory | collective (ici+xpod) | bound | "
+        "dominant | useful FLOPs | fits 16G? |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    doms = defaultdict(int)
+    for (arch, shape), r in sorted(best.items()):
+        if r.get("status") == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | skipped | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | ERROR | — | — |")
+            continue
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        fits = r["memory"]["per_device_total"] < 16 * 2**30
+        doms[rf["dominant"]] += 1
+        rows.append(
+            f"| {arch} | {shape} | {rf['compute_s']*1e3:.1f} ms "
+            f"| {rf['memory_s']*1e3:.1f} ms "
+            f"| {rf['collective_s']*1e3:.1f} ms "
+            f"| {bound*1e3:.1f} ms | {rf['dominant']} "
+            f"| {rf['useful_flops_frac']*100:.0f}% "
+            f"| {'yes' if fits else 'NO'} |")
+    rows.append("")
+    rows.append("dominant-term histogram: "
+                + ", ".join(f"{k}={v}" for k, v in sorted(doms.items())))
+    return "\n".join(rows)
+
+
+def run() -> str:
+    import os
+    parts = [
+        "## Roofline — baseline table (single-pod 16x16, 256 chips, paper-faithful config)", "",
+        render("results/dryrun.json", mesh="single"), "",
+        "## Roofline — baseline multi-pod (2x16x16, 512 chips)", "",
+        render("results/dryrun.json", mesh="multi"), ""]
+    if os.path.exists("results/dryrun_opt.json"):
+        parts += [
+            "## Roofline — OPTIMIZED (after EXPERIMENTS.md §Perf), single-pod", "",
+            render("results/dryrun_opt.json", mesh="single"), "",
+            "## Roofline — OPTIMIZED, multi-pod", "",
+            render("results/dryrun_opt.json", mesh="multi"), ""]
+    return "\n".join(parts)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,42 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report.  ``PYTHONPATH=src python -m benchmarks.run``"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig1,bloodflow,streams,roofline")
+    args = ap.parse_args()
+    sections = {
+        "table1": ("benchmarks.table1_throughput", "Table 1 WAN throughput"),
+        "fig1": ("benchmarks.fig1_steptime", "Fig 1 distributed overhead"),
+        "bloodflow": ("benchmarks.overlap_bloodflow", "bloodflow latency hiding"),
+        "streams": ("benchmarks.streams_sweep", "streams sweep"),
+        "roofline": ("benchmarks.roofline_report", "roofline report"),
+    }
+    chosen = args.only.split(",") if args.only else list(sections)
+    failures = 0
+    print("# WideJAX benchmarks (MPWide reproduction)\n")
+    for name in chosen:
+        mod_name, desc = sections[name]
+        t0 = time.time()
+        print(f"\n<!-- section {name}: {desc} -->\n")
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            print(mod.run())
+            print(f"_({name} completed in {time.time()-t0:.0f}s)_")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"SECTION {name} FAILED:")
+            traceback.print_exc(file=sys.stdout)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Table 1: WAN throughput — scp vs MPWide vs ZeroMQ between London,
+Poznan, Gdansk, Amsterdam.
+
+Reproduction on a CPU-only container has two halves:
+  (a) MODELED: the TCP-window/alpha-beta mechanism (a single stream is capped
+      at window/RTT; MPWide's S parallel streams evade the cap until path
+      capacity) against the paper's measured numbers.
+  (b) MEASURED: real collectives moving the paper's 64 MB payload across
+      "pods" of fake CPU devices for each transfer engine (flat single-op,
+      MPWide streamed path, gateway Forwarder) — validating behaviour and
+      relative op structure, not absolute WAN bandwidth.
+"""
+from __future__ import annotations
+
+from benchmarks.common import TABLE1_LINKS, fmt_mbs, run_multidev, stream_throughput
+
+PAYLOAD_MB = 64   # paper: "we exchanged 64MB of data"
+
+
+def modeled_table() -> str:
+    rows = []
+    rows.append("| endpoints | tool | paper MB/s | modeled MB/s |")
+    rows.append("|---|---|---|---|")
+    for link in TABLE1_LINKS:
+        # scp: one stream + crypto overhead
+        scp = stream_throughput(link, 1, efficiency=0.7) / 1e6
+        # MPWide: 32 streams (paper's WAN guidance), negligible overhead
+        mpw = stream_throughput(link, 32) / 1e6
+        # ZeroMQ: single connection, default autotuned window (larger than
+        # scp's, no crypto): modeled as one stream with a 4x window
+        zmq = min(link.capacity_Bps,
+                  4 * link.per_stream_window / link.rtt_s) / 1e6
+        rows.append(f"| {link.name} | scp | {link.paper_scp[0]}/{link.paper_scp[1]} "
+                    f"| {scp:.0f} |")
+        rows.append(f"| {link.name} | **MPWide** | {link.paper_mpwide[0]}/"
+                    f"{link.paper_mpwide[1]} | {mpw:.0f} |")
+        if link.paper_zeromq:
+            z0 = link.paper_zeromq[0]
+            z1 = link.paper_zeromq[1] if link.paper_zeromq[1] else "-"
+            rows.append(f"| {link.name} | ZeroMQ | {z0}/{z1} | {zmq:.0f} |")
+    return "\n".join(rows)
+
+
+_MEASURE_SNIPPET = r"""
+import time, json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import WidePath, wide_allreduce
+from repro.configs.base import CommConfig
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+N = {nbytes} // 4
+payload = {{"g": jnp.ones((N,), jnp.float32)}}
+out = {{}}
+for mode, streams in [("flat",1),("hierarchical",1),("hierarchical",32),
+                      ("gateway",32)]:
+    comm = CommConfig(mode=mode, streams=streams, chunk_mb=2.0)
+    path = WidePath(axis="pod", comm=comm)
+    def body(t):
+        return wide_allreduce(t, path, data_axes=("data",), dims={{"g":0}})
+    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                axis_names={{"pod","data"}}, check_vma=False))
+    with jax.set_mesh(mesh):
+        r = f(payload); jax.block_until_ready(r)      # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            r = f(payload)
+        jax.block_until_ready(r)
+        dt = (time.perf_counter() - t0) / 3
+    out[f"{{mode}}/s{{streams}}"] = dt
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def measured_table(nbytes: int = PAYLOAD_MB << 20) -> str:
+    res = run_multidev(_MEASURE_SNIPPET.format(nbytes=nbytes))
+    rows = ["| engine | wall time (64MB allreduce, 8 fake CPU devs) |",
+            "|---|---|"]
+    for k, v in res.items():
+        rows.append(f"| {k} | {v*1e3:.1f} ms |")
+    return "\n".join(rows)
+
+
+def run() -> str:
+    parts = ["## Table 1 — WAN throughput (scp vs MPWide vs ZeroMQ)", "",
+             "### Modeled (TCP-window mechanism, paper's endpoints)", "",
+             modeled_table(), "",
+             "MPWide's multi-stream paths saturate path capacity where a "
+             "single window-capped stream (scp) cannot — the paper's 5-6x "
+             "gain on London-Poznan reproduces as the window/RTT cap.", "",
+             "### Measured (real collectives, CPU fake devices)", "",
+             measured_table(), ""]
+    return "\n".join(parts)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,70 @@
+"""The bloodflow scenario (paper §1.2.2): two concurrently-running solvers on
+different machines exchange boundary conditions every step through MPWide,
+with latency hiding.
+
+Here: a coarse "1D" solver lives on pod 0 and a fine "3D" solver on pod 1
+(SPMD: both pods run both programs on their own data; the coupling exchange
+is the pod-ring MPW_SendRecv).  Each outer step:
+  1. both solvers advance their state (compute),
+  2. boundary values are exchanged non-blocking (MPW_ISendRecv),
+  3. MPW_Wait orders the receive before it is consumed next step —
+     the exchange overlaps with the tail of compute, as in the paper.
+
+Run:  PYTHONPATH=src python examples/couple_apps.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CommConfig
+from repro.core import MPW
+
+STEPS = 20
+N = 512
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(axis="pod", nstreams=4)
+    mpw.setChunkSize(pid, 1 << 12)
+
+    def solver_step(u, boundary):
+        # diffusion with the neighbour's boundary folded in at the edge
+        u = u.at[0].set(0.5 * (u[0] + boundary))
+        lap = jnp.roll(u, 1) - 2 * u + jnp.roll(u, -1)
+        return u + 0.1 * lap
+
+    def coupled(u0):
+        def step(carry, _):
+            u, boundary = carry
+            u = solver_step(u, boundary)                       # compute
+            got, tok = mpw.ISendRecv(pid, {"b": u[-1]})        # non-blocking
+            new_boundary = mpw.Wait(got, tok)["b"]             # ordered
+            return (u, new_boundary), jnp.mean(u)
+        (u, _), means = jax.lax.scan(step, (u0, jnp.float32(0.0)),
+                                     None, length=STEPS)
+        mpw.Barrier()
+        return u, means
+
+    f = jax.jit(jax.shard_map(coupled, mesh=mesh, in_specs=(P(),),
+                              out_specs=(P("pod"), P("pod")),
+                              axis_names={"pod"}, check_vma=False))
+    u0 = jnp.sin(jnp.linspace(0, 6.28, N))
+    with jax.set_mesh(mesh):
+        u, means = f(u0)
+    means = means.reshape(2, STEPS)   # out_specs P("pod") stacks pods on dim0
+    print(f"coupled solvers ran {STEPS} steps; per-pod mean trajectories:")
+    print("  pod0:", [f"{float(x):.4f}" for x in means[0][::5]])
+    print("  pod1:", [f"{float(x):.4f}" for x in means[1][::5]])
+    assert jnp.isfinite(u).all()
+    mpw.Finalize()
+    print("couple_apps OK (MPW_ISendRecv/Wait/Barrier over the pod ring)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serve a small model with batched requests: greedy decode against a KV
+cache through the sharded serve step.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import (CommConfig, RunConfig, ShapeConfig, TrainConfig,
+                           get_config, smoke_config)
+from repro.runtime import Server
+
+
+def main():
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    B, cache_len, new_tokens = 8, 128, 24
+    rc = RunConfig(model=cfg, shape=ShapeConfig("d", cache_len, B, "decode"),
+                   comm=CommConfig(), train=TrainConfig(zero1=True))
+    with jax.set_mesh(mesh):
+        server = Server(rc, mesh)
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, size=(B, 1)).astype(np.int32)
+        t0 = time.perf_counter()
+        res = server.generate(prompts, max_new=new_tokens)
+        dt = time.perf_counter() - t0
+    print(f"served {B} requests x {new_tokens} tokens in {dt:.2f}s "
+          f"({B*new_tokens/dt:.1f} tok/s on fake CPU devices)")
+    print("sample continuations:")
+    for i in range(3):
+        print(f"  req{i}: {res.tokens[i][:12].tolist()}")
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

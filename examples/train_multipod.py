@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on the learnable synthetic stream, with MPWide-hierarchical
+gradient sync, ZeRO sharding, checkpoints + DataGather replication, and a
+straggler report.
+
+Run:  PYTHONPATH=src python examples/train_multipod.py [--steps 300]
+(8 fake CPU devices arranged as 2 pods x 2 data x 2 model)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs import CommConfig, ModelConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.data import DataConfig, make_pipeline
+from repro.runtime import Trainer
+
+
+def hundred_m_config() -> ModelConfig:
+    """~100M llama-family model (the e2e deliverable target size)."""
+    return ModelConfig(
+        name="llama-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32000, rope_theta=10_000.0, remat=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    print(f"model: {cfg.name} params={cfg.param_count()/1e6:.1f}M")
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    rc = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("train", args.seq_len, args.global_batch, "train"),
+        comm=CommConfig(mode="hierarchical", streams=16, chunk_mb=2.0),
+        train=TrainConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                          total_steps=args.steps, zero1=True, microbatches=2))
+    data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq_len,
+                                    global_batch=args.global_batch,
+                                    noise=0.02))
+    with tempfile.TemporaryDirectory() as d, jax.set_mesh(mesh):
+        tr = Trainer(rc, mesh, ckpt_dir=os.path.join(d, "ckpt"),
+                     replica_dir=os.path.join(d, "replica"), ckpt_every=100)
+        print("state:", tr.init_or_restore(),
+              f"(ZeRO={tr.bundle.zero}, path: {tr.bundle.path.streams} streams "
+              f"x {tr.bundle.path.chunk_bytes >> 20}MiB chunks)")
+        hist = tr.run(data, args.steps, log_every=25)
+        first = sum(h["loss"] for h in hist[:5]) / 5
+        last = sum(h["loss"] for h in hist[-5:]) / 5
+        print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps")
+        print(f"stragglers flagged: {len(tr.detector.flagged)}")
+        print(f"checkpoints: {tr.manager.steps()} (replicated via DataGather)")
+        tr.close()
+
+
+if __name__ == "__main__":
+    main()

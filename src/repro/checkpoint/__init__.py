@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.replicate import DataGather, sync_once  # noqa: F401
+from repro.checkpoint.store import load_manifest, restore, save  # noqa: F401

@@ -1,0 +1,90 @@
+"""Checkpoint manager: retention, latest-step discovery, async save,
+optional DataGather replication to a peer location."""
+from __future__ import annotations
+
+import os
+import re
+import threading
+from typing import Any, Optional
+
+from repro.checkpoint import store
+from repro.checkpoint.replicate import DataGather
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, chunk_mb: float = 32.0,
+                 streams: int = 8, replica_dir: Optional[str] = None):
+        self.dir = directory
+        self.keep = keep
+        self.chunk_mb = chunk_mb
+        self.streams = streams
+        os.makedirs(directory, exist_ok=True)
+        self.gatherer = None
+        if replica_dir:
+            self.gatherer = DataGather(directory, replica_dir).start()
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- discovery -----------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = _STEP_RE.match(d)
+            if m and os.path.exists(os.path.join(self.dir, d, store.MANIFEST)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    # -- save/restore ---------------------------------------------------------
+    def save(self, step: int, state, *, extra: Optional[dict] = None,
+             block: bool = True):
+        """Save (optionally async: device_get happens now, file IO in a
+        background thread — off the training critical path)."""
+        import jax
+        import numpy as np
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def run():
+            store.save(host_state, self.path(step), step=step,
+                       chunk_mb=self.chunk_mb, streams=self.streams, extra=extra)
+            self._prune()
+
+        # always drain a pending async save first: two writers on the same
+        # step_N.tmp directory race rmtree/os.replace against each other
+        self.wait()
+        if block:
+            run()
+        else:
+            self._async_thread = threading.Thread(target=run, daemon=True)
+            self._async_thread.start()
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def restore(self, like, *, step: Optional[int] = None, shardings=None
+                ) -> tuple[Any, dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        return store.restore(self.path(step), like, shardings=shardings,
+                             streams=self.streams)
+
+    def _prune(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            import shutil
+            shutil.rmtree(self.path(s), ignore_errors=True)
+
+    def close(self):
+        self.wait()
+        if self.gatherer:
+            self.gatherer.stop()

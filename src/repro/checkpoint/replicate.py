@@ -1,0 +1,76 @@
+"""DataGather: continuous one-way directory synchronization.
+
+The paper's DataGather keeps a remote directory mirrored while a simulation
+runs, so output data accumulates at one site.  Here it mirrors checkpoint
+directories to a replica location (a peer pod's storage in production; any
+path here), running concurrently with training — whole-pod loss then
+restarts from the replica.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+
+
+def sync_once(src: str, dst: str) -> int:
+    """One-way sync; returns number of files copied. Atomic per file."""
+    if not os.path.isdir(src):
+        return 0
+    os.makedirs(dst, exist_ok=True)
+    copied = 0
+    for root, _, files in os.walk(src):
+        rel = os.path.relpath(root, src)
+        troot = os.path.join(dst, rel) if rel != "." else dst
+        os.makedirs(troot, exist_ok=True)
+        for fn in files:
+            s = os.path.join(root, fn)
+            t = os.path.join(troot, fn)
+            if (not os.path.exists(t)
+                    or os.path.getmtime(s) > os.path.getmtime(t)
+                    or os.path.getsize(s) != os.path.getsize(t)):
+                tmp = t + ".tmp"
+                shutil.copy2(s, tmp)
+                os.replace(tmp, t)
+                copied += 1
+    # prune deleted entries (keep mirror exact)
+    for root, _, files in os.walk(dst):
+        rel = os.path.relpath(root, dst)
+        sroot = os.path.join(src, rel) if rel != "." else src
+        for fn in files:
+            if fn.endswith(".tmp"):
+                continue
+            if not os.path.exists(os.path.join(sroot, fn)):
+                os.remove(os.path.join(root, fn))
+    return copied
+
+
+class DataGather:
+    """Background mirroring thread (start/stop)."""
+
+    def __init__(self, src: str, dst: str, interval_s: float = 2.0):
+        self.src, self.dst = src, dst
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.copied_total = 0
+
+    def start(self):
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    self.copied_total += sync_once(self.src, self.dst)
+                except OSError:
+                    pass
+                self._stop.wait(self.interval_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=10)
+        self.copied_total += sync_once(self.src, self.dst)

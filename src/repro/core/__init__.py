@@ -1,0 +1,13 @@
+"""MPWide core: paths, streamed collectives, autotuner, relay, MPW_* API."""
+from repro.core.api import MPW  # noqa: F401
+from repro.core.autotune import Tuning, autotune_path, tune  # noqa: F401
+from repro.core.collectives import (  # noqa: F401
+    flat_allreduce,
+    gateway_allreduce,
+    hierarchical_allreduce,
+    streamed_psum,
+    wide_allreduce,
+)
+from repro.core.cycle import barrier, cycle, pod_shift, relay, sendrecv  # noqa: F401
+from repro.core.overlap import accum_grads  # noqa: F401
+from repro.core.path import ICI, INTERPOD, LinkSpec, WidePath, local_path  # noqa: F401

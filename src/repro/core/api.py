@@ -1,0 +1,137 @@
+"""Paper-faithful MPW_* API facade (Table 2 of the paper).
+
+MPWide exposes a tiny C-style API; higher-level services are asked to
+integrate it as a module.  This facade offers the same verbs over mesh-axis
+paths so coupled-application code (examples/couple_apps.py) reads like an
+MPWide program.  All calls are jit-compatible and must run inside the
+manual-DP shard_map context the runtime establishes.
+
+Differences from the C++ API, by necessity of the platform:
+  * buffers are pytrees of fixed-shape arrays, not char*: XLA requires
+    static shapes.  MPW_DSendRecv ("unknown size using caching") keeps the
+    paper's *interface* by carrying (max-size buffer, length) pairs — the
+    cache is the compiled executable for each max size.
+  * non-blocking sends return a token; MPW_Wait orders against it via
+    optimization_barrier (the scheduler overlaps in between, which is
+    exactly what the paper's ISendRecv achieves with threads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CommConfig
+from repro.core import cycle as cy
+from repro.core.autotune import autotune_path
+from repro.core.collectives import streamed_psum
+from repro.core.path import INTERPOD, WidePath
+
+
+@dataclass
+class _PathState:
+    path: WidePath
+
+
+@dataclass
+class MPW:
+    """One MPWide session (MPW_Init .. MPW_Finalize)."""
+    paths: dict[int, _PathState] = field(default_factory=dict)
+    _next: int = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    @staticmethod
+    def Init() -> "MPW":
+        return MPW()
+
+    def Finalize(self) -> None:
+        self.paths.clear()
+
+    # -- path management ----------------------------------------------------
+    def CreatePath(self, axis: str = "pod", nstreams: int = 32,
+                   link=INTERPOD, comm: Optional[CommConfig] = None) -> int:
+        comm = comm or CommConfig(streams=nstreams)
+        pid = self._next
+        self._next += 1
+        self.paths[pid] = _PathState(WidePath(axis=axis, comm=comm, link=link))
+        return pid
+
+    def DestroyPath(self, pid: int) -> None:
+        del self.paths[pid]
+
+    def path(self, pid: int) -> WidePath:
+        return self.paths[pid].path
+
+    # -- tuning knobs (paper names) ------------------------------------------
+    def setChunkSize(self, pid: int, nbytes: int) -> None:
+        self.paths[pid].path = self.paths[pid].path.with_(chunk_mb=nbytes / (1 << 20))
+
+    def setPacingRate(self, pid: int, rate: float) -> None:
+        self.paths[pid].path = self.paths[pid].path.with_(pacing=rate)
+
+    def setWin(self, pid: int, nbytes: int) -> None:
+        # TCP window -> chunk payload sizing against the link BDP
+        self.setChunkSize(pid, nbytes)
+
+    def setAutoTuning(self, pid: int, enabled: bool,
+                      payload_bytes: Optional[int] = None) -> None:
+        p = self.paths[pid].path.with_(autotune=enabled)
+        if enabled and payload_bytes:
+            p = autotune_path(p, payload_bytes)
+        self.paths[pid].path = p
+
+    # -- data movement ------------------------------------------------------
+    def Send(self, pid: int, tree, shift: int = 1):
+        """Send to the ring neighbour; returns what the neighbour sent us
+        (SPMD sends are symmetric — this is MPW_SendRecv's send half)."""
+        return cy.pod_shift(tree, self.path(pid), shift)
+
+    def Recv(self, pid: int, tree, shift: int = 1):
+        return cy.pod_shift(tree, self.path(pid), -shift)
+
+    def SendRecv(self, pid: int, tree, shift: int = 1):
+        return cy.sendrecv(tree, self.path(pid), shift)
+
+    def DSendRecv(self, pid: int, tree, length: jax.Array, max_len: int,
+                  shift: int = 1):
+        """Unknown-size exchange: ships (buffer, length); receiver masks."""
+        payload = {"buf": tree, "len": jnp.asarray(length, jnp.int32)}
+        out = cy.sendrecv(payload, self.path(pid), shift)
+        return out["buf"], out["len"]
+
+    def ISendRecv(self, pid: int, tree, shift: int = 1):
+        """Non-blocking exchange: returns (result, token). The result must
+        not be consumed before MPW_Wait(token) orders it."""
+        out = cy.sendrecv(tree, self.path(pid), shift)
+        token = jax.tree.leaves(out)[0].reshape(-1)[0].astype(jnp.float32)
+        return out, token
+
+    def Has_NBE_Finished(self, token) -> bool:
+        # SPMD collectives complete within the step; the token exists to
+        # order consumers (paper semantics: poll -> always true by Wait time)
+        return True
+
+    def Wait(self, value, token):
+        out, _ = jax.lax.optimization_barrier((value, token))
+        return out
+
+    def AllReduce(self, pid: int, tree, dims=None):
+        """Not in the C API (MPWide users hand-roll it); provided because
+        gradient sync is the dominant use in this framework."""
+        return streamed_psum(tree, self.path(pid), dims=dims)
+
+    def Cycle(self, recv_pid: int, send_pid: int, tree):
+        return cy.cycle(self.path(recv_pid), self.path(send_pid), tree)
+
+    def Relay(self, pid: int, tree, hops: int = 1):
+        return cy.relay(tree, self.path(pid), hops)
+
+    def Barrier(self):
+        return cy.barrier()
+
+    @staticmethod
+    def DNSResolve(host: str) -> str:
+        """Mesh-axis 'addressing': pods are coordinates, not hostnames."""
+        return host

@@ -1,0 +1,96 @@
+"""MPWide autotuner, alpha-beta edition.
+
+The paper's autotuner (on by default) picks chunk size / window / pacing for
+"fairly good performance with minimal effort".  Without TCP, the objective
+becomes: minimize modeled *exposed* link time for a payload of `nbytes` over
+a link, given a `compute_window` of overlappable work.
+
+Model (per device, ring all-reduce factor folded into eff_bytes):
+  per-chunk cost     t(c) = alpha + c / bw
+  serial link time   T    = n_chunks * alpha + B / bw
+  exposure           E    = max(0, T - W) + tail,  tail = c / bw
+The optimum chunk count n* = sqrt(B / (alpha * bw)) balances launch overhead
+against tail granularity — the WAN regime (large alpha*bw product) drives
+n* up, reproducing the paper's ">=32 streams long-haul, 1 stream local"
+guidance.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.path import LinkSpec, WidePath
+
+
+@dataclass(frozen=True)
+class Tuning:
+    streams: int
+    chunk_bytes: int
+    modeled_link_s: float
+    modeled_exposed_s: float
+
+
+def allreduce_bytes(nbytes: int, world: int, algo: str = "ring") -> float:
+    """Per-device link bytes for an all-reduce of `nbytes`."""
+    if world <= 1:
+        return 0.0
+    if algo == "ring":
+        return 2.0 * (world - 1) / world * nbytes
+    return float(nbytes)  # gather-based
+
+
+def model_transfer(nbytes: float, link: LinkSpec, n_chunks: int,
+                   compute_window: float = 0.0) -> tuple[float, float]:
+    """(total link seconds, exposed seconds after overlapping with window)."""
+    n_chunks = max(1, n_chunks)
+    total = n_chunks * link.latency_s + nbytes / link.bandwidth_Bps
+    tail = (nbytes / n_chunks) / link.bandwidth_Bps
+    exposed = max(0.0, total - compute_window) + tail
+    return total, exposed
+
+
+def tune(nbytes: int, link: LinkSpec, *, world: int = 2,
+         compute_window: float = 0.0, max_streams: int = 256) -> Tuning:
+    """Pick (streams, chunk) minimizing modeled exposure.
+
+    streams: on window-capped links (WANs), enough parallel windows to fill
+    the bandwidth-delay product — the paper's ">=32 streams long-haul";
+    window-free fabrics keep a small concurrency for latency hiding.
+    chunk: alpha-beta optimum (scanned exactly; the closed form is
+    sqrt(B/(alpha*bw)))."""
+    eff = allreduce_bytes(nbytes, world)
+    if eff == 0.0:
+        return Tuning(1, max(nbytes, 1), 0.0, 0.0)
+    best = None
+    for n in _chunk_candidates(eff, link, max_streams):
+        total, exposed = model_transfer(eff, link, n, compute_window)
+        key = (exposed, total, n)
+        if best is None or key < best[0]:
+            best = (key, n, total, exposed)
+    _, n, total, exposed = best
+    if link.window:
+        bdp = link.bandwidth_Bps * 2 * link.latency_s
+        streams = int(min(max_streams, max(1, math.ceil(bdp / link.window))))
+    else:
+        streams = int(min(n, 32))
+    return Tuning(streams=streams,
+                  chunk_bytes=max(1 << 16, int(math.ceil(eff / n))),
+                  modeled_link_s=total, modeled_exposed_s=exposed)
+
+
+def _chunk_candidates(eff: float, link: LinkSpec, max_streams: int):
+    n_star = math.sqrt(eff / (link.latency_s * link.bandwidth_Bps))
+    cands = {1, 2, 4, 8, 16, 32, 64, 128, 256,
+             max(1, int(n_star)), max(1, int(n_star * 2)),
+             max(1, int(n_star / 2))}
+    return sorted(c for c in cands if c <= max(max_streams, 1) * 64)
+
+
+def autotune_path(path: WidePath, nbytes: int, *, world: int = 2,
+                  compute_window: float = 0.0) -> WidePath:
+    """Return a path re-tuned for a payload size (MPW_setAutoTuning)."""
+    if not path.comm.autotune:
+        return path
+    t = tune(nbytes, path.link, world=world, compute_window=compute_window)
+    return path.with_(streams=t.streams,
+                      chunk_mb=max(t.chunk_bytes / (1 << 20), 0.0625))

@@ -1,0 +1,194 @@
+"""Wide-area collectives: the paper's transfer engine mapped onto mesh axes.
+
+All functions here run inside a shard_map body where the DP axes ("pod",
+"data") are *manual*; the TP axis stays under GSPMD.  The cross-pod stage is
+the WAN analogue and is where streams / chunking / pacing / compression
+apply.
+
+Modes (CommConfig.mode):
+  flat          one big psum over (data+pod) per leaf — the single-stream
+                scp/naive baseline.
+  hierarchical  in-pod reduce-scatter -> streamed/chunked cross-pod psum on
+                1/D-size shards -> in-pod all-gather.  The firewall-level
+                forwarding hierarchy of the paper; default.
+  gateway       in-pod all-reduce, cross-pod exchange performed only by the
+                data-rank-0 "front-end" group, in-pod broadcast.  The
+                user-space Forwarder, faithfully including its inefficiency.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compress as comp
+from repro.core import streams as st
+from repro.core.path import WidePath
+from repro.sharding import manual_axes_present
+
+
+def _chain(dep: jax.Array, x: jax.Array) -> jax.Array:
+    """Order x after dep without touching values (stream sequencing)."""
+    x, _ = jax.lax.optimization_barrier((x, dep))
+    return x
+
+
+def _psum_one(x: jax.Array, dim: int, axis: str, compress: str) -> jax.Array:
+    if compress == "int8":
+        return comp.compressed_psum(x, dim, axis)
+    if compress == "bf16":
+        return comp.bf16_psum(x, axis)
+    return jax.lax.psum(x, axis)
+
+
+def streamed_psum(tree, path: WidePath, dims=None):
+    """Chunked, streamed, paced psum of a pytree over path.axis.
+
+    This is MPW_Send/Recv semantics for an all-reduce payload: the payload is
+    split into chunks (MPW_setChunkSize), chunks are round-robined over
+    `streams` independent channels, chunks within a channel are ordered, and
+    pacing serializes channel groups (MPW_setPacingRate).
+    """
+    if path.axis not in manual_axes_present(path.axis):
+        return tree  # axis absent (single-pod): nothing to cross
+    leaves, treedef = jax.tree.flatten(tree)
+    if dims is None:
+        dim_list: list[Optional[int]] = [0 if l.ndim else None for l in leaves]
+    else:
+        dim_list = (dims if isinstance(dims, list)
+                    else jax.tree.leaves(dims, is_leaf=lambda x: x is None))
+        dim_list = [d if (d is not None) else (0 if l.ndim else None)
+                    for l, d in zip(leaves, dim_list)]
+    chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
+    buckets = st.assign_streams(chunks, path.streams)
+
+    # pacing: only ceil(streams * pacing) streams in flight per wave
+    pace = max(0.0, min(1.0, float(path.comm.pacing)))
+    per_wave = max(1, int(round(len(buckets) * pace))) if buckets else 1
+
+    done: dict[int, list] = {i: [] for i in range(len(leaves))}
+    wave_token = jnp.zeros((), jnp.float32)
+    for w0 in range(0, len(buckets), per_wave):
+        wave = buckets[w0:w0 + per_wave]
+        wave_results = []
+        for bucket in wave:
+            dep = wave_token
+            for c in bucket:
+                x = st.slice_chunk(leaves[c.leaf], c)
+                x = _chain(dep, x)
+                r = _psum_one(x, c.dim, path.axis, path.comm.compress)
+                done[c.leaf].append((c, r))
+                dep = r.reshape(-1)[0].astype(jnp.float32)  # order within stream
+            wave_results.append(dep)
+        if w0 + per_wave < len(buckets):  # pace next wave after this one
+            wave_token = sum(wave_results) * 0.0
+
+    out_leaves = []
+    for i, leaf in enumerate(leaves):
+        pieces = done[i]
+        if not pieces:
+            out_leaves.append(leaf)
+        else:
+            out_leaves.append(st.stitch_leaf(leaf, pieces))
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
+def flat_allreduce(tree, axes: Sequence[str]):
+    axes = manual_axes_present(*axes)
+    if not axes:
+        return tree
+    return jax.tree.map(lambda g: jax.lax.psum(g, axes), tree)
+
+
+def hierarchical_allreduce(tree, path: WidePath, data_axes: Sequence[str],
+                           dims, keep_scattered: bool = False):
+    """RS(data) -> streamed cross-pod psum -> AG(data).
+
+    `dims` is the per-leaf scatter-dim tree (from param.tree_fsdp_dims).
+    With keep_scattered the final AG is skipped (ZeRO: the optimizer updates
+    shards).  Leaves with dim None fall back to psum over data.
+    """
+    data_axes = manual_axes_present(*data_axes)
+    leaves, treedef = jax.tree.flatten(tree)
+    dim_list = jax.tree.leaves(dims, is_leaf=lambda x: x is None)
+
+    def rs(g, d):
+        if not data_axes:
+            return g
+        if d is None or g.ndim == 0 or g.shape[d] % _axes_size(data_axes) != 0:
+            return jax.lax.psum(g, data_axes)
+        return _psum_scatter_nd(g, d, data_axes)
+
+    scat = [rs(g, d) for g, d in zip(leaves, dim_list)]
+    scat_tree = jax.tree.unflatten(treedef, scat)
+    synced = streamed_psum(scat_tree, path, dims=dim_list)
+    if keep_scattered:
+        return synced
+
+    def ag(g, g0, d):
+        if not data_axes or d is None or g.shape == g0.shape:
+            return g
+        return _all_gather_nd(g, d, data_axes)
+
+    out = [ag(g, g0, d) for g, g0, d in zip(jax.tree.leaves(synced), leaves, dim_list)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def gateway_allreduce(tree, path: WidePath, data_axes: Sequence[str]):
+    """The user-space Forwarder: front-end group relays all WAN traffic."""
+    data_axes = manual_axes_present(*data_axes)
+    if data_axes:
+        tree = jax.tree.map(lambda g: jax.lax.psum(g, data_axes), tree)
+    if path.axis not in manual_axes_present(path.axis):
+        return tree
+    if not data_axes:
+        return streamed_psum(tree, path)
+    rank = jax.lax.axis_index(data_axes[0])
+    for ax in data_axes[1:]:
+        rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    is_gw = (rank == 0)
+
+    masked = jax.tree.map(lambda g: jnp.where(is_gw, g, jnp.zeros_like(g)), tree)
+    crossed = streamed_psum(masked, path)
+    # broadcast from the gateway within the pod (psum of gateway-only values);
+    # non-gateway ranks hold the pre-cross in-pod sum, which must be dropped.
+    gw_only = jax.tree.map(lambda g: jnp.where(is_gw, g, jnp.zeros_like(g)), crossed)
+    return jax.tree.map(lambda g: jax.lax.psum(g, data_axes), gw_only)
+
+
+def wide_allreduce(tree, path: WidePath, *, data_axes: Sequence[str] = ("data",),
+                   dims=None, keep_scattered: bool = False):
+    """Dispatch on CommConfig.mode. The one entry point the runtime uses."""
+    mode = path.comm.mode
+    if mode == "flat":
+        return flat_allreduce(tree, tuple(data_axes) + (path.axis,))
+    if mode == "gateway":
+        return gateway_allreduce(tree, path, data_axes)
+    if mode == "hierarchical":
+        return hierarchical_allreduce(tree, path, data_axes, dims,
+                                      keep_scattered=keep_scattered)
+    raise ValueError(f"unknown comm mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _axes_size(axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+def _psum_scatter_nd(g: jax.Array, dim: int, axes: Sequence[str]) -> jax.Array:
+    for a in axes:
+        g = jax.lax.psum_scatter(g, a, scatter_dimension=dim, tiled=True)
+    return g
+
+
+def _all_gather_nd(g: jax.Array, dim: int, axes: Sequence[str]) -> jax.Array:
+    for a in reversed(axes):
+        g = jax.lax.all_gather(g, a, axis=dim, tiled=True)
+    return g

@@ -1,0 +1,85 @@
+"""Point-to-point and relay primitives over the pod ring (MPW_Send/Recv
+between endpoints, MPW_Cycle, MPW_Relay).
+
+Pods form a ring over the "pod" mesh axis; sends are collective_permute
+(ppermute) shifts.  Inside the manual-DP shard_map these are the explicit
+cross-pod messages of the paper — used by the coupled-application example
+(the bloodflow scenario) and by the relay benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import streams as st
+from repro.core.path import WidePath
+from repro.sharding import manual_axes_present
+
+
+def _ring_perm(n: int, shift: int) -> list[tuple[int, int]]:
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def pod_shift(tree, path: WidePath, shift: int = 1):
+    """Send the payload to the pod `shift` positions ahead on the ring,
+    receive from the one behind (chunked over the path's streams)."""
+    if path.axis not in manual_axes_present(path.axis):
+        return tree
+    n = jax.lax.axis_size(path.axis)
+    perm = _ring_perm(n, shift)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    dims = [0 if l.ndim else None for l in leaves]
+    chunks = st.plan_chunks(leaves, dims, path.chunk_bytes)
+    buckets = st.assign_streams(chunks, path.streams)
+    done: dict[int, list] = {i: [] for i in range(len(leaves))}
+    for bucket in buckets:
+        dep = jnp.zeros((), jnp.float32)
+        for c in bucket:
+            x = st.slice_chunk(leaves[c.leaf], c)
+            x, _ = jax.lax.optimization_barrier((x, dep))
+            r = jax.lax.ppermute(x, path.axis, perm)
+            done[c.leaf].append((c, r))
+            dep = r.reshape(-1)[0].astype(jnp.float32) if r.ndim else r.astype(jnp.float32)
+    out = [st.stitch_leaf(l, done[i]) if done[i] else l
+           for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def sendrecv(send_tree, path: WidePath, shift: int = 1):
+    """MPW_SendRecv: symmetric exchange with the ring neighbour.
+
+    Returns the payload received from the pod `shift` behind.
+    """
+    return pod_shift(send_tree, path, shift)
+
+
+def cycle(recv_from_path: WidePath, send_on_path: WidePath, tree):
+    """MPW_Cycle: receive a buffer over one path, forward it over another.
+
+    On a pod ring this composes two shifts: data arrives from the previous
+    pod on path A and continues to the next pod on path B — the building
+    block of sustained relays across >2 machines (the paper's 3- and
+    4-supercomputer runs).
+    """
+    received = pod_shift(tree, recv_from_path, 1)
+    return pod_shift(received, send_on_path, 1)
+
+
+def relay(tree, path: WidePath, hops: int):
+    """MPW_Relay: sustained forwarding for `hops` ring steps."""
+    out = tree
+    for _ in range(max(1, hops)):
+        out = pod_shift(out, path, 1)
+    return out
+
+
+def barrier(axes: Sequence[str] = ("pod", "data")) -> jax.Array:
+    """MPW_Barrier: synchronize across the wide area (scalar psum)."""
+    axes = manual_axes_present(*axes)
+    tok = jnp.ones((), jnp.float32)
+    if axes:
+        tok = jax.lax.psum(tok, axes)
+    return tok

@@ -1,0 +1,59 @@
+"""Latency hiding: overlap cross-pod gradient sync with compute
+(MPW_ISendRecv / MPW_Wait, the bloodflow-coupling trick).
+
+`accum_grads` runs gradient accumulation where microbatch i's cross-pod sync
+is issued *inside* iteration i+1: the sync has no data dependence on
+iteration i+1's forward/backward, so the XLA latency-hiding scheduler can
+run the collective concurrently with compute.  Only the final microbatch's
+sync is exposed — 1/m of the naive exposure (paper: 11 ms RTT coupling
+reduced to 6 ms exposed, 1.2% of runtime).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def accum_grads(grad_fn: Callable, params, microbatches, *, sync: Callable,
+                dims=None, overlap: bool = True):
+    """grad_fn(params, microbatch) -> ((loss, metrics), grads).
+
+    microbatches: pytree whose leaves have a leading microbatch dim m.
+    sync(grads) -> synced grads (the WidePath transfer).
+    Returns (mean_loss, metrics_last, synced_grad_sum).
+
+    With overlap=False this is plain accumulate-then-sync (the baseline the
+    paper's latency hiding is measured against).
+    """
+    m = jax.tree.leaves(microbatches)[0].shape[0]
+
+    def mb(i):
+        return jax.tree.map(lambda x: x[i], microbatches)
+
+    if not overlap or m == 1:
+        total_loss = jnp.float32(0.0)
+        acc = None
+        metrics = None
+        for i in range(m):
+            (loss, metrics), g = grad_fn(params, mb(i))
+            total_loss += loss
+            acc = g if acc is None else jax.tree.map(jnp.add, acc, g)
+        return total_loss / m, metrics, sync(acc)
+
+    # software-pipelined: sync microbatch i-1 while computing microbatch i
+    (loss0, metrics), pending = grad_fn(params, mb(0))
+    total_loss = loss0
+    synced = None
+    for i in range(1, m):
+        (loss_i, metrics), g_i = grad_fn(params, mb(i))
+        # sync(pending) is independent of g_i's computation; the scheduler
+        # may overlap the cross-pod transfer with this iteration's compute.
+        s = sync(pending)
+        synced = s if synced is None else jax.tree.map(jnp.add, synced, s)
+        pending = g_i
+        total_loss = total_loss + loss_i
+    s = sync(pending)                   # exposed tail (1/m of the naive cost)
+    synced = s if synced is None else jax.tree.map(jnp.add, synced, s)
+    return total_loss / m, metrics, synced

@@ -1,0 +1,75 @@
+"""WidePath: the MPWide communication-path abstraction, adapted to TPU.
+
+A path in the paper is (endpoint pair, S tcp streams, chunk size, pacing,
+window).  Here a path is (mesh axis, S chunk-streams, chunk bytes, pacing,
+compression): every transfer over the path is split into chunks, chunks are
+round-robined onto S *streams*, chunks within one stream are ordered (like
+bytes on one TCP connection) while distinct streams are independent HLO ops
+the XLA latency-hiding scheduler may run concurrently and overlap with
+compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.configs.base import CommConfig
+
+
+from typing import Optional as _Optional
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """alpha-beta link model (per device).
+
+    `window`: per-stream in-flight byte cap (TCP congestion window) — the
+    mechanism behind the paper's ">=32 streams on WANs": one stream moves at
+    most window/RTT.  None for links without per-channel caps (TPU fabrics).
+    """
+    name: str
+    latency_s: float          # alpha: per-op launch + one-way latency
+    bandwidth_Bps: float      # beta^-1: per-device link bandwidth
+    window: _Optional[float] = None
+
+    def transfer_s(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+
+# hardware constants (assignment): TPU v5e
+ICI = LinkSpec("ici", 1e-6, 50e9)               # intra-pod, per link
+INTERPOD = LinkSpec("interpod", 50e-6, 6.25e9)  # cross-pod DCN-class link
+# WAN regimes from the paper's experiments (for the table-1 benchmark);
+# windows ~64KB reproduce the paper's observed single-stream (scp) rates
+WAN_LONDON_POZNAN = LinkSpec("lon-poz", 12e-3, 125e6, window=64 << 10)
+WAN_POZNAN_GDANSK = LinkSpec("poz-gda", 5e-3, 156e6, window=64 << 10)
+WAN_POZNAN_AMS = LinkSpec("poz-ams", 9e-3, 70e6, window=64 << 10)
+WAN_UCL_HECTOR = LinkSpec("ucl-hector", 5.5e-3, 120e6, window=64 << 10)
+
+
+@dataclass(frozen=True)
+class WidePath:
+    """A configured communication path over one mesh axis."""
+    axis: str = "pod"
+    comm: CommConfig = CommConfig()
+    link: LinkSpec = INTERPOD
+
+    @property
+    def streams(self) -> int:
+        return max(1, int(self.comm.streams))
+
+    @property
+    def chunk_bytes(self) -> int:
+        return max(1 << 16, int(self.comm.chunk_mb * (1 << 20)))
+
+    def with_(self, **kw) -> "WidePath":
+        comm_kw = {k: v for k, v in kw.items() if hasattr(self.comm, k)}
+        path_kw = {k: v for k, v in kw.items() if k in ("axis", "link")}
+        comm = replace(self.comm, **comm_kw) if comm_kw else self.comm
+        return replace(self, comm=comm, **path_kw)
+
+
+def local_path(comm: Optional[CommConfig] = None) -> WidePath:
+    """Single-stream path over the intra-pod fabric (paper: 1 stream local)."""
+    comm = comm or CommConfig(streams=1, chunk_mb=64.0, compress="none")
+    return WidePath(axis="data", comm=comm, link=ICI)

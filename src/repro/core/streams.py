@@ -1,0 +1,77 @@
+"""Chunk planning: split a gradient pytree into chunk descriptors and assign
+them round-robin to streams (MPW_Send "splitted evenly over the channels").
+
+Chunks are cut along each leaf's *scatter dim* (the dim that is not
+TP-sharded — the same dim ZeRO shards over "data"), so slicing never crosses
+a GSPMD-sharded dimension and costs no collective.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Chunk:
+    leaf: int                 # index into the flat leaf list
+    dim: int                  # dim being sliced
+    start: int
+    size: int
+    nbytes: int               # approximate payload bytes
+
+
+def leaf_bytes(x) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+
+
+def plan_chunks(leaves: list, dims: list[Optional[int]], chunk_bytes: int
+                ) -> list[Chunk]:
+    """Split each leaf into chunks of <= chunk_bytes along its scatter dim."""
+    chunks: list[Chunk] = []
+    for i, (x, dim) in enumerate(zip(leaves, dims)):
+        nb = leaf_bytes(x)
+        if dim is None or nb <= chunk_bytes or x.shape[dim] <= 1:
+            chunks.append(Chunk(i, dim if dim is not None else 0, 0,
+                                x.shape[dim] if dim is not None and x.ndim else 0, nb))
+            continue
+        n = x.shape[dim]
+        bytes_per_row = nb // n
+        rows = max(1, chunk_bytes // max(bytes_per_row, 1))
+        start = 0
+        while start < n:
+            size = min(rows, n - start)
+            chunks.append(Chunk(i, dim, start, size, size * bytes_per_row))
+            start += size
+    return chunks
+
+
+def assign_streams(chunks: list[Chunk], streams: int) -> list[list[Chunk]]:
+    """Round-robin chunks onto streams by descending size (balanced load)."""
+    streams = max(1, min(streams, max(1, len(chunks))))
+    buckets: list[list[Chunk]] = [[] for _ in range(streams)]
+    loads = [0] * streams
+    for c in sorted(chunks, key=lambda c: -c.nbytes):
+        s = int(np.argmin(loads))
+        buckets[s].append(c)
+        loads[s] += c.nbytes
+    return [b for b in buckets if b]
+
+
+def slice_chunk(x: jax.Array, c: Chunk) -> jax.Array:
+    if c.size == 0 or c.size == x.shape[c.dim]:
+        return x
+    return jax.lax.slice_in_dim(x, c.start, c.start + c.size, axis=c.dim)
+
+
+def stitch_leaf(x_template: jax.Array, pieces: list[tuple[Chunk, jax.Array]]
+                ) -> jax.Array:
+    """Reassemble a leaf from its processed chunks."""
+    if len(pieces) == 1 and (pieces[0][0].size == 0
+                             or pieces[0][0].size == x_template.shape[pieces[0][0].dim]):
+        return pieces[0][1]
+    pieces = sorted(pieces, key=lambda p: p[0].start)
+    return jnp.concatenate([p[1] for p in pieces], axis=pieces[0][0].dim)

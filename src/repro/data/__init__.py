@@ -1,0 +1,2 @@
+from repro.data.pipeline import (BinaryTokens, DataConfig, Prefetcher,  # noqa: F401
+                                 SyntheticLM, make_pipeline)

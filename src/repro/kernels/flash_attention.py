@@ -1,0 +1,121 @@
+"""Flash attention Pallas TPU kernel (causal + sliding-window, GQA-aware).
+
+Layout: q (B, H, Sq, D), k/v (B, KH, Sk, D).  Grid (B*H, Sq/bq, Sk/bk) with
+the k-block dimension innermost; online-softmax running stats live in VMEM
+scratch across k-blocks.  Block sizes are MXU-aligned (multiples of 128 on
+the sequence dims; D is the lane dim and is padded by Mosaic if needed).
+
+VMEM working set per program ≈ (bq + 2*bk) * D * 2B + bq*bk*4B + bq*D*4B —
+with bq=bk=512, D=128 that is ~1.7 MiB, comfortably inside the ~16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (seq_k - seq_q)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)                     # (bk, D)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                  # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         group: int = 1,
+                         causal: bool = True,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None,
+                         block_q: int = 512,
+                         block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B*H, Sq, D), k/v: (B*KH, Sk, D) with H == KH*group.
+
+    GQA is handled index-map-side: q program `b` reads k/v row `b // group`
+    (standard head order h -> h // group), so k/v are never materialized
+    per-q-head.
+    """
+    BH, Sq, D = q.shape
+    BKH, Sk, _ = k.shape
+    assert BH == BKH * group, (BH, BKH, group)
+    if scale is None:
+        scale = D ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad sequence dims to block multiples (masked out by kpos < seq_k)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    grid = (BH, (Sq + pq) // bq, (Sk + pk) // bk)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, seq_q=Sq, seq_k=Sk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,79 @@
+"""Blockwise int8 quant/dequant Pallas kernels.
+
+Used by the cross-pod compression stage (core/compress.py): gradients are
+quantized to int8 with per-`block`-lane float32 scales before traversing the
+inter-pod ("WAN") link, cutting link bytes ~3.8x.  Bandwidth-bound; tiles are
+(rows, block) VMEM panels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (rows, block)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...]).astype(o_ref.dtype)
+
+
+def quant_int8_2d(x: jax.Array, *, block: int = 256, rows: int = 256,
+                  interpret: bool = False):
+    """x: (R, n) with n % block == 0 -> (int8 (R,n), f32 scales (R, n/block))."""
+    R, n = x.shape
+    assert n % block == 0
+    nb = n // block
+    br = min(rows, R)
+    pr = (-R) % br
+    if pr:
+        x = jnp.pad(x, ((0, pr), (0, 0)))
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=((R + pr) // br, nb),
+        in_specs=[pl.BlockSpec((br, block), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((br, block), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R + pr, n), jnp.int8),
+            jax.ShapeDtypeStruct((R + pr, nb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:R], s[:R]
+
+
+def dequant_int8_2d(q: jax.Array, s: jax.Array, *, block: int = 256,
+                    rows: int = 256, dtype=jnp.float32,
+                    interpret: bool = False) -> jax.Array:
+    R, n = q.shape
+    nb = n // block
+    br = min(rows, R)
+    pr = (-R) % br
+    if pr:
+        q = jnp.pad(q, ((0, pr), (0, 0)))
+        s = jnp.pad(s, ((0, pr), (0, 0)))
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=((R + pr) // br, nb),
+        in_specs=[
+            pl.BlockSpec((br, block), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R + pr, n), dtype),
+        interpret=interpret,
+    )(q, s)
+    return out[:R]

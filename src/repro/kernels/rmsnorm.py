@@ -1,0 +1,40 @@
+"""Fused RMSNorm Pallas kernel — bandwidth-bound row kernel.
+
+Grid over row tiles; each program normalizes (block_rows, d) in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+                 block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (R, d); w: (d,)."""
+    R, d = x.shape
+    br = min(block_rows, R)
+    pr = (-R) % br
+    if pr:
+        x = jnp.pad(x, ((0, pr), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((R + pr) // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R + pr, d), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:R]

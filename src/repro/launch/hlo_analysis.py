@@ -1,0 +1,334 @@
+"""Scan-aware HLO static analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` lowered to ``while`` contributes its body a single time, so
+FLOPs/bytes/collectives of layer-scanned models are undercounted by ~L×.
+This analyzer parses the post-optimization HLO text, attributes per-op
+costs to their computation, resolves while/call/fusion/conditional call
+graphs, multiplies while bodies by their parsed trip counts, and returns
+roofline-grade totals:
+
+  flops            dot/convolution MACs ×2 (per device, SPMD program)
+  bytes            Σ over ops of operand+result bytes (same naive model XLA
+                   uses for "bytes accessed")
+  collectives      per-device link bytes by kind, split ICI vs inter-pod
+
+It is the profiling backbone for §Perf: per-computation tables show where
+compute/collective time concentrates.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+?)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|calls|branch_computations|called_computations)="
+    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*\S.*\{\s*$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops whose operands/results move no real HBM bytes
+_FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(dt: str, dims: list[int]) -> int:
+    return int(np.prod(dims)) * _DTYPE_BYTES[dt] if dims else _DTYPE_BYTES[dt]
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)      # kind -> (ici, cross) bytes
+    calls: list = field(default_factory=list)     # (name, kind) kind: while|call
+    trip_hint: float = 1.0                        # condition constants
+    ds_trip: float = 1.0                          # leading dims sliced to 1
+    ds_like: bool = False                         # contains slice-type ops
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_ici: float = 0.0
+    coll_cross: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    n_coll_ops: int = 0
+    per_comp: dict = field(default_factory=dict)
+
+
+def _dot_flops(res_dims: list[int], lhs_dims: list[int], line: str) -> float:
+    m = _DOT_DIMS.search(line)
+    k = 1
+    if m:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    return 2.0 * float(np.prod(res_dims) if res_dims else 1.0) * k
+
+
+def _group_info(line: str, pod_size: int):
+    m = re.search(r"replica_groups=\{(\{[^}]*\})", line)
+    if m:
+        ids = [int(x) for x in m.group(1).strip("{}").split(",") if x.strip()]
+        crosses = len({i // pod_size for i in ids}) > 1
+        return len(ids), crosses
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+                  line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        groups = ids.reshape(ngroups, gsize)
+        crosses = bool(np.any(groups // pod_size != groups[:, :1] // pod_size))
+        return gsize, crosses
+    return 1, False
+
+
+def _coll_link_bytes(kind: str, nbytes: float, line: str, pod_size: int):
+    """(link_bytes, crosses) for one collective op with result size nbytes.
+
+    XLA-CPU's AllReducePromotion pass widens bf16 all-reduce/reduce-scatter
+    to f32 (convert -> collective -> convert); the TPU target runs them
+    native bf16, so promoted collectives count at half width."""
+    P, crosses = _group_info(line, pod_size)
+    if P <= 1:
+        return 0.0, False
+    if "promoted" in line and "to_apply=" in line:
+        nbytes *= 0.5
+    if kind == "all-reduce":
+        link = 2.0 * (P - 1) / P * nbytes
+    elif kind == "all-gather":
+        link = (P - 1) / P * nbytes         # result is the gathered size
+    elif kind == "reduce-scatter":
+        link = (P - 1) * nbytes             # result is the scattered shard
+    elif kind == "all-to-all":
+        link = (P - 1) / P * nbytes
+    else:
+        link = float(nbytes)
+    return link, crosses
+
+
+def parse_hlo(text: str, pod_size: int = 256):
+    """Returns (comps, entry_name). Two passes: first collect every op's
+    result size into a module-wide name table (operands are referenced by
+    name only in post-opt HLO), then attribute costs."""
+    name_bytes: dict[str, float] = {}
+    name_dims: dict[str, list[int]] = {}
+    lines = text.splitlines()
+    for raw in lines:
+        m = _OP_RE.match(raw.rstrip())
+        if not m:
+            continue
+        name, body = m.group(1), m.group(2)
+        # result type(s) = text before the op token
+        opm = re.search(r"([a-z][a-z0-9\-]*)\(", body)
+        res_text = body[:opm.start()] if opm else body
+        shapes = _shapes_in(res_text)
+        name_bytes[name] = sum(_nbytes(dt, d) for dt, d in shapes)
+        name_dims[name] = shapes[0][1] if shapes else []
+
+    comps: dict[str, CompCost] = {}
+    cur = None
+    entry = None
+    for raw in lines:
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = comps.setdefault(hdr.group(2), CompCost())
+            if hdr.group(1):
+                entry = hdr.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, body = m.group(1), m.group(2)
+        opm = re.search(r"([a-z][a-z0-9\-]*)\(", body)
+        kind = opm.group(1) if opm else ""
+        if opm:
+            close = body.find(")", opm.end())
+            operands = _OPERANDS_RE.findall(
+                body[opm.end():close if close >= 0 else len(body)])
+        else:
+            operands = []
+
+        if kind in ("dot", "convolution") and operands:
+            cur.flops += _dot_flops(name_dims.get(name, []),
+                                    name_dims.get(operands[0], []), body)
+        base = kind.replace("-start", "")
+        if base in _COLL_KINDS and not kind.endswith("-done"):
+            link, crosses = _coll_link_bytes(base, name_bytes.get(name, 0.0),
+                                             body, pod_size)
+            if link:
+                k = (base, crosses)
+                cur.coll[k] = cur.coll.get(k, 0.0) + link
+        res_b = name_bytes.get(name, 0.0)
+        if kind in ("dynamic-slice", "gather"):
+            # reads/writes only the slice, not the sliced buffer
+            cur.bytes += 2.0 * res_b
+            cur.ds_like = True
+            # trip-count hint: slicing [L, ...] down to [1, ...]
+            if operands:
+                big = name_dims.get(operands[0], [])
+                out = name_dims.get(name, [])
+                if (kind == "dynamic-slice" and len(big) == len(out)
+                        and big and out and out[0] == 1 and big[0] > 1
+                        and big[1:] == out[1:]):
+                    cur.ds_trip = max(cur.ds_trip, float(big[0]))
+        elif kind == "dynamic-update-slice":
+            upd = name_bytes.get(operands[1], 0.0) if len(operands) > 1 else res_b
+            cur.bytes += 2.0 * upd
+            cur.ds_like = True
+            if len(operands) > 1:
+                big = name_dims.get(operands[0], [])
+                u = name_dims.get(operands[1], [])
+                if (len(big) == len(u) and big and u and u[0] == 1
+                        and big[0] > 1 and big[1:] == u[1:]):
+                    cur.ds_trip = max(cur.ds_trip, float(big[0]))
+        elif kind == "scatter":
+            upd = name_bytes.get(operands[2], 0.0) if len(operands) > 2 else res_b
+            cur.bytes += 2.0 * upd + res_b
+            cur.ds_like = True
+        elif kind == "fusion":
+            # boundary traffic; but a fusion wrapping a dynamic-slice reads
+            # only the slice of its big operand, not the whole buffer —
+            # operand bytes resolved in analyze() once the callee's flag is
+            # known (definition order is not guaranteed)
+            cur.bytes += res_b
+            op_bytes = [name_bytes.get(o, 0.0) for o in operands
+                        if not o.startswith("constant")]
+            cur.calls.append(("__opbytes__", "opbytes", (op_bytes, res_b)))
+        elif kind not in _FREE_OPS and kind:
+            cur.bytes += res_b
+            cur.bytes += sum(name_bytes.get(o, 0.0) for o in operands
+                             if not o.startswith("constant"))
+        if "constant(" in body:
+            for c in _CONST_RE.finditer(body):
+                v = float(c.group(1))
+                if 1 < v <= 1_000_000:
+                    cur.trip_hint = max(cur.trip_hint, v)
+        if kind == "while":
+            bm = _WHILE_BODY_RE.search(body)
+            cm = _WHILE_COND_RE.search(body)
+            if bm:
+                cur.calls.append((bm.group(1), "while_body",
+                                  cm.group(1) if cm else None))
+        elif kind == "fusion":
+            cm = _CALLED_RE.search(body)
+            if cm:
+                for n in cm.group(1).split(","):
+                    # fused computations: count their dot flops, but their
+                    # internal op "bytes" are registers, not HBM traffic
+                    cur.calls.append((n.strip().lstrip("%"), "fusion", None))
+        elif kind:
+            cm = _CALLED_RE.search(body)
+            if cm:
+                for n in cm.group(1).split(","):
+                    cur.calls.append((n.strip().lstrip("%"), "call", None))
+    return comps, entry
+
+
+def _trip_count(comps: dict, cond_name, body_name) -> float:
+    """Trip count of a while: max of condition-constant and the structural
+    hint (a scan body dynamic-slices its stacked xs [L, ...] to [1, ...] —
+    robust even when XLA hoists the bound constant out of the condition)."""
+    cand = 1.0
+    cond = comps.get(cond_name) if cond_name else None
+    if cond is not None:
+        cand = max(cand, cond.trip_hint)
+    body = comps.get(body_name) if body_name else None
+    if body is not None:
+        hint = body.ds_trip
+        # ds hints may also live one fusion level down
+        for callee, k, _ in body.calls:
+            sub = comps.get(callee)
+            if k in ("fusion", "call") and sub is not None:
+                hint = max(hint, sub.ds_trip)
+        cand = max(cand, hint)
+    return cand
+
+
+def analyze(text: str, pod_size: int = 256) -> HloCost:
+    comps, entry = parse_hlo(text, pod_size)
+    total = HloCost()
+    seen_stack: set = set()
+
+    def walk(name: str, mult: float, bytes_on: bool):
+        if name in seen_stack:       # defensive: no recursion in HLO anyway
+            return
+        comp = comps.get(name)
+        if comp is None:
+            return
+        seen_stack.add(name)
+        total.flops += comp.flops * mult
+        if bytes_on:
+            total.bytes += comp.bytes * mult
+        for (kind, crosses), nb in comp.coll.items():
+            total.coll_by_kind[kind] = total.coll_by_kind.get(kind, 0.0) + nb * mult
+            if crosses:
+                total.coll_cross += nb * mult
+            else:
+                total.coll_ici += nb * mult
+            total.n_coll_ops += 1
+        pending = None
+        for callee, ckind, extra in comp.calls:
+            if ckind == "opbytes":
+                pending = extra
+                continue
+            m = mult
+            b = bytes_on
+            if ckind == "while_body":
+                m = mult * _trip_count(comps, extra, callee)
+                # condition itself runs trip+1 times; negligible cost
+            elif ckind == "fusion":
+                b = False
+                if bytes_on and pending is not None:
+                    op_bytes, res_b = pending
+                    callee_comp = comps.get(callee)
+                    slicey = callee_comp.ds_like if callee_comp else False
+                    for ob in op_bytes:
+                        total.bytes += (min(ob, 2.0 * max(res_b, 1.0)) if slicey
+                                        else ob) * mult
+                    pending = None
+            walk(callee, m, b)
+        seen_stack.discard(name)
+        total.per_comp[name] = {"flops": comp.flops, "bytes": comp.bytes,
+                                "mult": mult}
+
+    if entry:
+        walk(entry, 1.0, True)
+    return total

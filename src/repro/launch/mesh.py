@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; callers control XLA_FLAGS/device counts before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """single-pod: (16,16) ("data","model") = 256 chips (one v5e pod);
+    multi-pod:  (2,16,16) ("pod","data","model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

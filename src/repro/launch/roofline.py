@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+  compute    = HLO_FLOPs / (chips * peak_flops)
+  memory     = HLO_bytes / (chips * hbm_bw)
+  collective = sum over collective ops of per-device link bytes / link bw
+               (ICI within a pod, the inter-pod link across pods)
+
+collective bytes are NOT in cost_analysis(): we parse the compiled HLO and
+apply per-algorithm factors (ring all-reduce 2(P-1)/P, gather/scatter
+(P-1)/P, permute 1) with the replica-group span deciding which link.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_analysis import analyze as analyze_hlo  # noqa: F401
+
+# hardware constants (assignment: TPU v5e)
+PEAK_FLOPS = 197e12            # bf16 / chip
+HBM_BW = 819e9                 # bytes/s / chip
+ICI_BW = 50e9                  # bytes/s / link (intra-pod)
+INTERPOD_BW = 6.25e9           # bytes/s / chip (cross-pod link)
+POD_SIZE = 256
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(stext: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(stext):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    ici_bytes: float = 0.0          # per-device bytes over intra-pod links
+    interpod_bytes: float = 0.0     # per-device bytes over the cross-pod link
+    by_kind: dict = field(default_factory=dict)
+    n_ops: int = 0
+
+
+def _group_info(line: str, pod_size: int = POD_SIZE):
+    """(group_size, crosses_pod). Handles explicit and iota replica groups."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        size = len(ids)
+        crosses = len({i // pod_size for i in ids}) > 1
+        return size, crosses
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):  # iota transpose: v2 syntax [N,G]<=[dims]T(perm)
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(ngroups, gsize)
+        crosses = bool(np.any(groups // pod_size
+                              != groups[:, :1] // pod_size))
+        return gsize, crosses
+    return 1, False
+
+
+def collect_collectives(hlo_text: str, pod_size: int = POD_SIZE) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).replace("-start", "")
+        out_shape = m.group(1) or m.group(2)
+        nbytes = shape_bytes(out_shape)
+        P, crosses = _group_info(line, pod_size)
+        if P <= 1:
+            continue
+        if kind == "all-reduce":
+            link = 2.0 * (P - 1) / P * nbytes
+        elif kind == "all-gather":
+            link = (P - 1) / P * nbytes          # output is the gathered size
+        elif kind == "reduce-scatter":
+            # output is the scattered size; each device receives (P-1) shards
+            link = (P - 1) * nbytes
+        elif kind == "all-to-all":
+            link = (P - 1) / P * nbytes
+        else:  # collective-permute
+            link = float(nbytes)
+        st.n_ops += 1
+        st.by_kind[kind] = st.by_kind.get(kind, 0.0) + link
+        if crosses:
+            st.interpod_bytes += link
+        else:
+            st.ici_bytes += link
+    return st
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll: CollectiveStats
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        # cost_analysis flops are per-device (the SPMD program one chip runs)
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll.ici_bytes / ICI_BW + self.coll.interpod_bytes / INTERPOD_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): remat/dispatch waste detector."""
+        total = self.flops * self.chips
+        return (self.model_flops / total) if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "ici_bytes": self.coll.ici_bytes,
+            "interpod_bytes": self.coll.interpod_bytes,
+            "coll_by_kind": self.coll.by_kind,
+            "n_coll_ops": self.coll.n_ops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference); N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch * 1  # decode: one token

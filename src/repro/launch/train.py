@@ -1,0 +1,101 @@
+"""Production training launcher.
+
+On a real cluster each host runs this with coordinator env vars set
+(JAX_COORDINATOR, JAX_NUM_PROCESSES, JAX_PROCESS_ID) and the production
+mesh; in this container it runs a reduced config on the local device(s).
+
+Examples:
+  python -m repro.launch.train --arch qwen1.5-0.5b --steps 100 --smoke
+  python -m repro.launch.train --arch llama3.2-3b --shape train_4k \
+      --mode hierarchical --streams 32 --ckpt-dir /ckpt --replica-dir /backup
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import (SHAPES, CommConfig, RunConfig, ShapeConfig,
+                           TrainConfig, get_config, smoke_config)
+from repro.data import DataConfig, make_pipeline
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.runtime import Trainer
+
+
+def maybe_init_distributed():
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize(
+            coordinator_address=os.environ["JAX_COORDINATOR"],
+            num_processes=int(os.environ["JAX_NUM_PROCESSES"]),
+            process_id=int(os.environ["JAX_PROCESS_ID"]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mode", default="hierarchical",
+                    choices=["flat", "hierarchical", "gateway"])
+    ap.add_argument("--streams", type=int, default=32)
+    ap.add_argument("--chunk-mb", type=float, default=8.0)
+    ap.add_argument("--compress", default="none", choices=["none", "bf16", "int8"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--replica-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model + small shapes for local devices")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--data", default="synthetic", choices=["synthetic", "binary"])
+    ap.add_argument("--data-path", default=None)
+    args = ap.parse_args()
+
+    maybe_init_distributed()
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    base = SHAPES[args.shape]
+    seq = args.seq_len or (64 if args.smoke else base.seq_len)
+    gb = args.global_batch or (8 if args.smoke else base.global_batch)
+    shape = ShapeConfig(base.name, seq, gb, "train")
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        n = len(jax.devices())
+        model_par = 1
+        data_par = n
+        mesh = make_local_mesh(data=data_par, model=model_par)
+
+    rc = RunConfig(
+        model=cfg, shape=shape,
+        comm=CommConfig(mode=args.mode, streams=args.streams,
+                        chunk_mb=args.chunk_mb, compress=args.compress),
+        train=TrainConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1),
+                          microbatches=args.microbatches))
+    data = make_pipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=gb,
+        kind=args.data, path=args.data_path))
+
+    with jax.set_mesh(mesh):
+        trainer = Trainer(rc, mesh, ckpt_dir=args.ckpt_dir,
+                          replica_dir=args.replica_dir,
+                          ckpt_every=args.ckpt_every)
+        print(f"[train] {args.arch} params={cfg.param_count():,} mesh={mesh.shape} "
+              f"mode={args.mode} zero={trainer.bundle.zero}")
+        print(f"[train] {trainer.init_or_restore()} at step {trainer.step}")
+        hist = trainer.run(data, args.steps)
+        print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}; "
+              f"stragglers flagged: {len(trainer.detector.flagged)}")
+        trainer.close()
+
+
+if __name__ == "__main__":
+    main()

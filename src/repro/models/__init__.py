@@ -1,0 +1,1 @@
+from repro.models.registry import batch_abstract, batch_concrete, build_model  # noqa: F401

@@ -1,0 +1,341 @@
+"""Mamba2 / SSD (state-space duality) blocks, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060):
+quadratic attention *within* chunks of length Q, linear state recurrence
+*across* chunks (lax.scan over S/Q chunk states).  Decode uses the O(1)
+recurrent update.  SSD heads are sharded over the TP axis (d_inner dims);
+B/C are group-shared (ngroups=1, MQA-like) and replicated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import PD
+from repro.sharding import TP_AXIS, constrain
+
+Gather = Optional[Callable]
+
+
+def mamba_block_defs(cfg: ModelConfig, n_layers: int) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    gN = s.ngroups * s.state_dim
+    lay = ("layers",)
+    return {
+        "w_z": PD((n_layers, d, d_in), lay + ("d_model", "d_inner")),
+        "w_x": PD((n_layers, d, d_in), lay + ("d_model", "d_inner")),
+        "w_B": PD((n_layers, d, gN), lay + ("d_model", None)),
+        "w_C": PD((n_layers, d, gN), lay + ("d_model", None)),
+        "w_dt": PD((n_layers, d, H), lay + ("d_model", "ssm_heads")),
+        "conv_x": PD((n_layers, s.conv_width, d_in), lay + ("conv", "d_inner"),
+                     scale=s.conv_width ** -0.5),
+        "conv_B": PD((n_layers, s.conv_width, gN), lay + ("conv", None),
+                     scale=s.conv_width ** -0.5),
+        "conv_C": PD((n_layers, s.conv_width, gN), lay + ("conv", None),
+                     scale=s.conv_width ** -0.5),
+        "conv_x_b": PD((n_layers, d_in), lay + ("d_inner",), init="zeros"),
+        "conv_B_b": PD((n_layers, gN), lay + (None,), init="zeros"),
+        "conv_C_b": PD((n_layers, gN), lay + (None,), init="zeros"),
+        "A": PD((n_layers, H), lay + ("ssm_heads",), init="ssm_a", dtype="float32"),
+        "dt_bias": PD((n_layers, H), lay + ("ssm_heads",), init="zeros", dtype="float32"),
+        "norm": PD((n_layers, d_in), lay + ("d_inner",), init="ones"),
+        "w_out": PD((n_layers, d_in, d), lay + ("d_inner", "d_model"),
+                    scale=(d_in ** -0.5) / (2 * max(cfg.num_layers, 1)) ** 0.5),
+        "ln": PD((n_layers, d), lay + ("d_model",), init="ones"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C); b: (C,)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, Q: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) softplus'd; A: (H,) negative;
+    Bm/Cm: (B,S,N) (ngroups=1, broadcast over heads). Returns y (B,S,H,P).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xh = xh.reshape(Bsz, nc, Q, H, P)
+    dt = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    dA = dt * A[None, None, None, :]                     # (B,nc,Q,H) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                        # inclusive cumsum
+    seg_sum = dA_cs[:, :, -1, :]                          # (B,nc,H)
+
+    # intra-chunk (quadratic within chunk): y_i += sum_{j<=i} C_i.B_j *
+    #   exp(dAcs_i - dAcs_j) * dt_j * x_j
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cm, Bm)        # (B,nc,Q,Q)
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    # mask in log domain BEFORE exp: exp of the masked (positive) exponents
+    # would be inf, and inf*0 in the backward pass is NaN.
+    logdecay = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    logdecay = jnp.where(causal[None, None, :, :, None], logdecay, -1e30)
+    decay = jnp.exp(logdecay)
+    w = scores[..., None] * decay                         # (B,nc,Q,Q,H)
+    xdt = xh.astype(jnp.float32) * dt[..., None]          # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w, xdt)
+
+    # chunk states: S_c = sum_j B_j (x_j dt_j) exp(seg_sum - dAcs_j)
+    decay_to_end = jnp.exp(seg_sum[:, :, None, :] - dA_cs)            # (B,nc,Q,H)
+    state_c = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bm, decay_to_end, xdt)
+
+    # inter-chunk recurrence: h_{c} = exp(seg_sum_{c-1}) h_{c-1} + S_{c-1}
+    def step(h, inp):
+        s_c, seg = inp
+        h_next = h * jnp.exp(seg)[:, :, None, None] + s_c
+        return h_next, h                                   # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, h_prefix = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(seg_sum, 1, 0)))
+    h_prefix = jnp.moveaxis(h_prefix, 0, 1)                # (B,nc,H,P,N)
+
+    # y_inter_i = C_i . (exp(dAcs_i) * h_prefix)
+    decay_from_start = jnp.exp(dA_cs)                      # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cm, decay_from_start, h_prefix)
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(xh.dtype)
+
+
+def gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """Mamba2 output norm: RMSNorm(y * silu(z)) * w over the channel dim."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_forward(lp: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One mamba2 block (pre-norm residual included). x: (B,S,d)."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    z = h @ lp["w_z"]
+    xs = h @ lp["w_x"]
+    Bm = h @ lp["w_B"]
+    Cm = h @ lp["w_C"]
+    dt = (h @ lp["w_dt"]).astype(jnp.float32)
+    xs = constrain(xs, None, None, TP_AXIS)
+    z = constrain(z, None, None, TP_AXIS)
+    xs = jax.nn.silu(_causal_conv(xs, lp["conv_x"], lp["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, lp["conv_B"], lp["conv_B_b"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, lp["conv_C"], lp["conv_C_b"]))
+    dt = jax.nn.softplus(dt + lp["dt_bias"])
+    xh = xs.reshape(B_, S, H, s.head_dim)
+    y = _ssd_chunked(xh, dt, lp["A"], Bm, Cm, s.chunk)
+    y = constrain(y.reshape(B_, S, d_in), None, None, TP_AXIS)
+    y = gated_rmsnorm(y, z, lp["norm"], cfg.norm_eps)
+    return x + y @ lp["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent form)
+# ---------------------------------------------------------------------------
+
+def mamba_state_defs(cfg: ModelConfig, n_layers: int, batch: int) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    gN = s.ngroups * s.state_dim
+    conv_ch = d_in + 2 * gN
+    return {
+        "ssm": PD((n_layers, batch, H, s.head_dim, s.state_dim),
+                  ("layers", "batch", "ssm_heads", None, None), init="zeros",
+                  dtype="float32"),
+        "conv": PD((n_layers, batch, s.conv_width - 1, conv_ch),
+                   ("layers", "batch", None, "conv_ch"), init="zeros",
+                   dtype="float32"),
+    }
+
+
+def mamba_decode(lp: dict, state: dict, x: jax.Array, cfg: ModelConfig
+                 ) -> tuple[jax.Array, dict]:
+    """One-token recurrent update. x: (B,1,d); state: {"ssm","conv"} slices."""
+    s = cfg.ssm
+    B_, _, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    gN = s.ngroups * s.state_dim
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)[:, 0]       # (B,d)
+    z = h @ lp["w_z"]
+    xs = h @ lp["w_x"]
+    Bm = h @ lp["w_B"]
+    Cm = h @ lp["w_C"]
+    dt = jax.nn.softplus((h @ lp["w_dt"]).astype(jnp.float32) + lp["dt_bias"])
+
+    # conv ring: state["conv"] holds the last (W-1) pre-activation inputs
+    cur = jnp.concatenate([xs, Bm, Cm], axis=-1)          # (B, conv_ch)
+    hist = state["conv"]                                   # (B, W-1, conv_ch)
+    wfull = jnp.concatenate([lp["conv_x"], lp["conv_B"], lp["conv_C"]], axis=-1)
+    bfull = jnp.concatenate([lp["conv_x_b"], lp["conv_B_b"], lp["conv_C_b"]], axis=-1)
+    window = jnp.concatenate([hist, cur[:, None]], axis=1)  # (B, W, conv_ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window, wfull) + bfull
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+    xs_c = conv_out[:, :d_in]
+    Bm_c = conv_out[:, d_in:d_in + gN]
+    Cm_c = conv_out[:, d_in + gN:]
+
+    xh = xs_c.reshape(B_, H, s.head_dim).astype(jnp.float32)
+    dA = jnp.exp(dt * lp["A"][None])                      # (B,H)
+    ssm = state["ssm"]                                     # (B,H,P,N)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bm_c.astype(jnp.float32))
+    ssm = ssm * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm_c.astype(jnp.float32))
+    y = y.reshape(B_, d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z, lp["norm"], cfg.norm_eps)
+    out = x + (y @ lp["w_out"])[:, None]
+    return out, {"ssm": ssm, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# full attention-free model (mamba2-780m)
+# ---------------------------------------------------------------------------
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_defs(self) -> dict:
+        c = self.cfg
+        defs = {
+            "blocks": mamba_block_defs(c, c.num_layers),
+            "embed": PD((c.vocab_size, c.d_model), ("vocab", "d_model"), scale=0.02),
+            "ln_f": PD((c.d_model,), ("d_model",), init="ones"),
+        }
+        if not c.tie_embeddings:
+            defs["head"] = PD((c.d_model, c.vocab_size), ("d_model", "vocab"))
+        return defs
+
+    def _head(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["head"]
+
+    def hidden_states(self, params, batch, *, gather: Gather = None):
+        c = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        gather = gather or (lambda p: p)
+        body = functools.partial(self._apply, gather=gather)
+        if c.remat:
+            body = jax.checkpoint(body)
+
+        def step(x, lp):
+            return body(lp, x), None
+
+        x, _ = jax.lax.scan(step, x, params["blocks"])
+        return L.rms_norm(x, params["ln_f"], c.norm_eps), jnp.float32(0.0), 0
+
+    def _apply(self, lp, x, *, gather):
+        return mamba_forward(gather(lp), x, self.cfg)
+
+    def loss(self, params, batch, *, gather: Gather = None):
+        tokens = batch["tokens"]
+        x, _, _ = self.hidden_states(params, {**batch, "tokens": tokens[:, :-1]},
+                                     gather=gather)
+        sum_loss, count = L.chunked_ce_loss(x, self._head(params), tokens[:, 1:])
+        loss = sum_loss / jnp.maximum(count, 1.0)
+        return loss, {"ce_loss": loss, "aux_loss": jnp.float32(0.0), "tokens": count}
+
+    def logits(self, params, batch, *, gather: Gather = None):
+        x, _, _ = self.hidden_states(params, batch, gather=gather)
+        return constrain((x @ self._head(params)).astype(jnp.float32),
+                         None, None, TP_AXIS)
+
+    def cache_defs(self, batch_size: int, max_len: int) -> dict:
+        return mamba_state_defs(self.cfg, self.cfg.num_layers, batch_size)
+
+    def decode_step(self, params, cache, pos, tokens, *, gather: Gather = None):
+        c = self.cfg
+        gather = gather or (lambda p: p)
+        x = jnp.take(params["embed"], tokens, axis=0)
+
+        def step(x, inp):
+            lp, ssm, conv = inp
+            x, new = mamba_decode(gather(lp), {"ssm": ssm, "conv": conv}, x, c)
+            return x, (new["ssm"], new["conv"])
+
+        x, (ssm_new, conv_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["ssm"], cache["conv"]))
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = (x @ self._head(params)).astype(jnp.float32)
+        return constrain(logits, None, None, TP_AXIS), {"ssm": ssm_new, "conv": conv_new}
+
+    def prefill(self, params, batch, *, gather: Gather = None):
+        """Sequential-scan prefill producing the recurrent state.
+
+        For the dry-run we run the chunked forward for logits and a compact
+        recurrent pass for the final state; a production system would fuse
+        them (the chunked scan already computes chunk states).
+        """
+        c = self.cfg
+        gather = gather or (lambda p: p)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+
+        def body(x, lp):
+            lp = gather(lp)
+            y = mamba_forward(lp, x, c)
+            st = _final_state(lp, x, c)
+            return y, st
+
+        x, states = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = (x[:, -1:] @ self._head(params)).astype(jnp.float32)
+        return logits, states
+
+
+def _final_state(lp: dict, x: jax.Array, cfg: ModelConfig) -> dict:
+    """Final (ssm, conv) state after processing x through one block."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    gN = s.ngroups * s.state_dim
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    xs = h @ lp["w_x"]
+    Bm = h @ lp["w_B"]
+    Cm = h @ lp["w_C"]
+    dt = jax.nn.softplus((h @ lp["w_dt"]).astype(jnp.float32) + lp["dt_bias"])
+    pre = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = pre[:, -(s.conv_width - 1):]
+    xs = jax.nn.silu(_causal_conv(xs, lp["conv_x"], lp["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, lp["conv_B"], lp["conv_B_b"]))
+    xh = (xs.reshape(B_, S, H, s.head_dim).astype(jnp.float32)
+          * dt[..., None])
+    dA = dt * lp["A"][None, None]                          # (B,S,H) log-decay
+    # suffix decay: exp(sum_{j>t} dA_j)
+    suffix = jnp.cumsum(dA[:, ::-1], axis=1)[:, ::-1] - dA
+    w = jnp.exp(suffix)
+    ssm = jnp.einsum("bsh,bshp,bsn->bhpn", w, xh, Bm.astype(jnp.float32))
+    return {"ssm": ssm, "conv": conv_state}

@@ -1,0 +1,79 @@
+"""Top-k MoE layer with scatter-based (FLOP-free) dispatch and expert
+parallelism over the TP mesh axis.
+
+Dispatch is linear-cost: tokens are routed to per-expert capacity buffers via
+scatter-add, experts run as one batched einsum over the expert dim (sharded
+over "model" => expert parallelism), and outputs gather back.  No O(T^2)
+one-hot dispatch einsums.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.sharding import TP_AXIS, constrain
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y (B,S,d), aux_loss scalar).
+
+    params: router (d, E), gate/up (E, d, f), down (E, f, d).
+
+    Dispatches to the explicit expert-parallel all-to-all implementation
+    (moe_ep.py) whenever the shapes tile the TP axis — the GSPMD scatter
+    formulation below costs TBs of all-gather per step (§Perf P6) and is
+    kept as the fallback (single device, decode, odd meshes) and baseline
+    (REPRO_MOE_EP=0).
+    """
+    import os
+
+    from repro.models import moe_ep
+    B, S, d = x.shape
+    if (os.environ.get("REPRO_MOE_EP", "1") == "1"
+            and moe_ep.ep_applicable(cfg.num_experts, S)):
+        return moe_ep.moe_ffn_ep(p, x, cfg)
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                  # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E
+
+    # capacity positions: exclusive running count of prior assignments to the
+    # same expert, in (token-major, slot-minor) order.
+    C = int(max(1, round(cfg.capacity_factor * k * T / E)))
+    flat_ids = ids.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)         # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot                  # exclusive
+    pos = jnp.take_along_axis(pos_all, flat_ids[:, None], axis=1)[:, 0]
+    keep = pos < C                                                 # overflow drop
+    gates = gates * keep.reshape(T, k)
+
+    # dispatch: scatter tokens into (E, C, d) buffers (expert-parallel)
+    safe_pos = jnp.where(keep, pos, C - 1)
+    contrib = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((E, C, d), xt.dtype).at[flat_ids, safe_pos].add(contrib)
+    buf = constrain(buf, TP_AXIS, None, None)
+
+    # expert FFN, batched over E (sharded over "model" => one expert group/rank)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = constrain(h, TP_AXIS, None, None)
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    out = constrain(out, TP_AXIS, None, None)
+
+    # combine: gather each token's k expert outputs, weight by gates
+    picked = out[flat_ids, safe_pos]                               # (T*k, d)
+    picked = picked * (gates.reshape(T * k)[:, None]).astype(picked.dtype)
+    y = jnp.sum(picked.reshape(T, k, d), axis=1)
+    return y.reshape(B, S, d), aux

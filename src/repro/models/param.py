@@ -1,0 +1,143 @@
+"""Declarative parameter definitions.
+
+Each model builds one nested-dict tree of :class:`PD` (param defs); from that
+single source we derive initialization, PartitionSpecs (TP + optional
+FSDP/ZeRO dims), shard_map in_specs for the manual-DP training step, and
+abstract shapes for the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# logical axis names that map to the tensor-parallel mesh axis
+TP_LOGICAL = {"vocab", "heads", "kv_heads", "ff", "experts", "d_inner", "ssm_heads"}
+# logical axes eligible to carry the FSDP ("data") sharding dim
+FSDP_LOGICAL = {"d_model", "vocab", "ff", "d_inner", "heads", "kv_heads", "conv_ch", "source"}
+
+
+@dataclass(frozen=True)
+class PD:
+    """One parameter definition."""
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                     # normal | zeros | ones | ssm_a | arange
+    scale: Optional[float] = None            # stddev; default fan-in
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(pd: PD) -> int:
+    # fan-in = product of non-output dims; heuristically first non-layer dim
+    dims = [s for s, a in zip(pd.shape, pd.axes) if a not in (None, "layers")]
+    return dims[0] if dims else 1
+
+
+def init_one(pd: PD, key: jax.Array) -> jax.Array:
+    dt = jnp.dtype(pd.dtype)
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dt)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dt)
+    if pd.init == "ssm_a":
+        # mamba2: A = -exp(uniform log) in (-16, -1)
+        u = jax.random.uniform(key, pd.shape, jnp.float32, 1.0, 16.0)
+        return (-u).astype(dt)
+    if pd.init == "arange":
+        n = pd.shape[-1]
+        return jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), pd.shape).astype(dt)
+    std = pd.scale if pd.scale is not None else _fan_in(pd) ** -0.5
+    return (jax.random.normal(key, pd.shape, jnp.float32) * std).astype(dt)
+
+
+def is_pd_leaf(x) -> bool:
+    return isinstance(x, PD)
+
+
+def tree_init(defs, seed: int = 0):
+    """Initialize a full param tree from PDs (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_pd_leaf)
+    base = jax.random.PRNGKey(seed)
+    keys = jax.random.split(base, max(len(leaves), 1))
+    arrs = [init_one(pd, k) for pd, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def tree_abstract(defs):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, jnp.dtype(pd.dtype)),
+        defs, is_leaf=is_pd_leaf)
+
+
+def fsdp_dim(pd: PD, fsdp_size: int, tp_size: int = 16) -> Optional[int]:
+    """Pick the dim that carries the FSDP/"data" sharding for this param.
+
+    Prefer the *last* eligible dim (usually the largest feature dim) that is
+    divisible by the fsdp axis size and not already TP-sharded.  None when no
+    dim qualifies (param stays replicated over data; e.g. tiny scalars).
+    """
+    cand = [i for i in range(len(pd.shape))
+            if pd.axes[i] in FSDP_LOGICAL
+            and pd.axes[i] not in TP_LOGICAL
+            and pd.shape[i] % fsdp_size == 0]
+    if not cand:
+        # allow fsdp on a TP-logical dim when it is large and divisible by
+        # (tp*fsdp) — GSPMD composes both axes on one dim.
+        cand = [i for i in range(len(pd.shape))
+                if pd.axes[i] in TP_LOGICAL
+                and pd.shape[i] % (fsdp_size * max(tp_size, 1)) == 0]
+        return cand[-1] if cand else None
+    return cand[-1]
+
+
+def spec_for(pd: PD, *, tp_axis: str = "model", fsdp_axes: tuple[str, ...] = (),
+             fsdp_size: int = 1, tp_size: int = 16) -> P:
+    """PartitionSpec for one param: TP on logical TP dims, FSDP on one dim.
+
+    TP applies only when the dim divides evenly (e.g. mamba2's vocab 50280
+    is not divisible by 16 => the embedding stays replicated over model)."""
+    entries: list = []
+    for a, s in zip(pd.axes, pd.shape):
+        entries.append(tp_axis if (a in TP_LOGICAL and tp_size > 0
+                                   and s % max(tp_size, 1) == 0) else None)
+    if fsdp_axes and fsdp_size > 1:
+        d = fsdp_dim(pd, fsdp_size, tp_size)
+        if d is not None:
+            cur = entries[d]
+            if cur is None:
+                entries[d] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            else:
+                entries[d] = (cur,) + tuple(fsdp_axes)
+    return P(*entries)
+
+
+def tree_specs(defs, *, tp_axis: str = "model", fsdp_axes: tuple[str, ...] = (),
+               fsdp_size: int = 1, tp_size: int = 16):
+    return jax.tree.map(
+        lambda pd: spec_for(pd, tp_axis=tp_axis, fsdp_axes=fsdp_axes,
+                            fsdp_size=fsdp_size, tp_size=tp_size),
+        defs, is_leaf=is_pd_leaf)
+
+
+def tree_fsdp_dims(defs, fsdp_size: int, tp_size: int = 16):
+    """Per-param FSDP dim index (or None) — used by the manual-DP train step
+    to all-gather shards at use and reduce-scatter grads."""
+    return jax.tree.map(lambda pd: fsdp_dim(pd, fsdp_size, tp_size),
+                        defs, is_leaf=is_pd_leaf)
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_pd_leaf)
+    return int(sum(int(np.prod(pd.shape)) for pd in leaves))
+
+
+def leaf_bytes_pd(pd: PD) -> int:
+    return int(np.prod(pd.shape)) * jnp.dtype(pd.dtype).itemsize

@@ -1,0 +1,55 @@
+"""Model registry: build a model object for any registered arch, plus the
+input/batch specs (ShapeDtypeStructs) for each (arch × shape) cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.hybrid import HybridLM
+from repro.models.mamba2 import MambaLM
+from repro.models.transformer import Transformer
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    return Transformer(cfg)
+
+
+def batch_abstract(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one global batch (dry-run inputs)."""
+    B, S = shape.global_batch, shape.seq_len
+    bf16 = jnp.bfloat16
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:  # decode: one new token against a cache of length S
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.vision_tokens and shape.kind != "decode":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), bf16)
+    if cfg.encoder_layers and shape.kind != "decode":
+        batch["source_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.source_len, cfg.d_model), bf16)
+    return batch
+
+
+def batch_concrete(cfg: ModelConfig, shape_kind: str, batch_size: int,
+                   seq_len: int, seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests / examples."""
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 3)
+    S = seq_len + 1 if shape_kind == "train" else seq_len
+    batch = {"tokens": jax.random.randint(ks[0], (batch_size, S), 0,
+                                          cfg.vocab_size, jnp.int32)}
+    if cfg.vision_tokens and shape_kind != "decode":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[1], (batch_size, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder_layers and shape_kind != "decode":
+        batch["source_frames"] = jax.random.normal(
+            ks[2], (batch_size, cfg.source_len, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_update, global_norm, init_opt_state  # noqa: F401
+from repro.optim.schedule import lr_at  # noqa: F401

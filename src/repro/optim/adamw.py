@@ -1,0 +1,75 @@
+"""Functional AdamW with ZeRO-aware global-norm clipping.
+
+In ZeRO mode gradients/params/optimizer state are shards over the "data"
+axis: the global grad-norm needs a psum over "data" for scattered leaves but
+NOT for replicated ones (they already hold the full value on every rank).
+The `dims` tree (per-leaf scatter dim or None) encodes which is which.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.sharding import manual_axes_present
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(grads, dims=None, data_axes: Sequence[str] = ("data",)) -> jax.Array:
+    axes = manual_axes_present(*data_axes)
+    leaves = jax.tree.leaves(grads)
+    if dims is None:
+        dim_list: list[Optional[int]] = [None] * len(leaves)
+    else:
+        dim_list = (dims if isinstance(dims, list)
+                    else jax.tree.leaves(dims, is_leaf=lambda x: x is None))
+    scat = jnp.float32(0.0)
+    repl = jnp.float32(0.0)
+    for g, d in zip(leaves, dim_list):
+        s = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        if d is not None and axes:
+            scat = scat + s
+        else:
+            repl = repl + s
+    if axes:
+        scat = jax.lax.psum(scat, axes)
+    return jnp.sqrt(scat + repl)
+
+
+def adamw_update(grads, opt_state, params, tc: TrainConfig, lr: jax.Array, *,
+                 dims=None, data_axes: Sequence[str] = ("data",)):
+    """One AdamW step. Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    norm = global_norm(grads, dims, data_axes)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(norm, 1e-12)) \
+        if tc.grad_clip else jnp.float32(1.0)
+
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + tc.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": norm}

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_at(step, tc: TrainConfig):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    total = jnp.maximum(tc.total_steps - tc.warmup_steps, 1)
+    frac = jnp.clip((s - tc.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    floor = tc.min_lr_ratio
+    return tc.lr * warm * (floor + (1.0 - floor) * cos)

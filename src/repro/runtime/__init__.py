@@ -1,0 +1,4 @@
+from repro.runtime.serve_loop import Server  # noqa: F401
+from repro.runtime.step import StepBundle, build_serve_step, build_train_step  # noqa: F401
+from repro.runtime.train_loop import (InjectedFault, StragglerDetector,  # noqa: F401
+                                      Trainer, elastic_restart)

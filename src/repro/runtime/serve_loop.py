@@ -1,0 +1,63 @@
+"""Server: batched prefill + decode serving loop."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.models.param import tree_init
+from repro.runtime.step import build_serve_step
+
+
+@dataclass
+class ServeResult:
+    tokens: np.ndarray            # (B, generated)
+    steps: int
+
+
+class Server:
+    """Greedy batched decoding against the decode StepBundle.
+
+    Production serving would add continuous batching and paged caches; this
+    server exercises the assigned decode cells (one-token steps against a
+    seq_len cache) and the examples.
+    """
+
+    def __init__(self, rc: RunConfig, mesh, params=None, seed: int = 0):
+        self.rc = rc
+        self.mesh = mesh
+        self.bundle = build_serve_step(rc, mesh, kind="decode")
+        sh = self._sh(self.bundle.state_specs["params"])
+        params = params if params is not None else tree_init(self.bundle.param_defs, seed)
+        self.params = jax.device_put(params, sh)
+
+    def _sh(self, specs):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def init_cache(self):
+        from repro.models.param import tree_init as ti
+        cache = ti(self.bundle.cache_defs, 0)      # zeros
+        return jax.device_put(cache, self._sh(self.bundle.state_specs["cache"]))
+
+    def generate(self, prompt_tokens: np.ndarray, max_new: int = 16,
+                 prefill_pos: Optional[int] = None) -> ServeResult:
+        """prompt_tokens: (B, 1) last prompt token per sequence (the cache is
+        zeros here — real deployments prefill; see examples/serve_decode.py)."""
+        B = prompt_tokens.shape[0]
+        cache = self.init_cache()
+        pos = jnp.int32(prefill_pos if prefill_pos is not None else 0)
+        tok = jax.device_put(jnp.asarray(prompt_tokens, jnp.int32),
+                             self._sh(self.bundle.batch_specs["tokens"]))
+        out = []
+        for i in range(max_new):
+            logits, cache = self.bundle.fn(self.params, cache, pos + i, tok)
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok)[:, 0])
+        return ServeResult(tokens=np.stack(out, axis=1), steps=max_new)

@@ -1,0 +1,452 @@
+"""Train/serve step builders.
+
+Architecture (see DESIGN.md §2/§3):
+  * one jit per step; inside it a shard_map that is MANUAL over the DP axes
+    ("pod","data") and AUTO over "model" (GSPMD handles tensor parallelism
+    from sharding constraints).
+  * ZeRO-3 layout (default with the hierarchical comm mode): params +
+    optimizer state are stored scattered over "data"; layer weights are
+    all-gathered at use inside the layer scan (the model's `gather` hook),
+    so autodiff emits the in-pod reduce-scatter of gradients for free.
+  * the cross-pod ("WAN") stage is the explicit MPWide WidePath:
+    streamed/chunked/paced/compressed psum over the "pod" axis.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.core.autotune import autotune_path
+from repro.core.collectives import (flat_allreduce, gateway_allreduce,
+                                    streamed_psum)
+from repro.core.overlap import accum_grads
+from repro.core.path import INTERPOD, WidePath
+from repro.models import build_model
+from repro.models.param import (PD, is_pd_leaf, leaf_bytes_pd, tree_abstract,
+                                tree_fsdp_dims, tree_init, tree_specs)
+from repro.optim import adamw_update, init_opt_state, lr_at
+
+NOFSDP = -1
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _manual_part(spec: P, manual: set[str]) -> P:
+    """Keep only manual axes of a spec (shard_map in_specs see manual axes)."""
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append(e if e in manual else None)
+        else:
+            kept = tuple(a for a in e if a in manual)
+            out.append(kept[0] if len(kept) == 1 else (kept or None))
+    return P(*out)
+
+
+def _strip_layer_dim(dims_tree):
+    """Scan strips the leading layer dim: shift gather dims down by one."""
+    return jax.tree.map(
+        lambda d: NOFSDP if d in (None, NOFSDP, 0) else d - 1,
+        dims_tree, is_leaf=lambda x: x is None)
+
+
+@dataclass
+class StepBundle:
+    fn: Callable                       # jitted step
+    mesh: Any
+    model: Any
+    param_defs: Any
+    state_specs: Any                   # full PartitionSpec tree (for jit io)
+    batch_specs: Any
+    dims: Any                          # per-leaf scatter dims (None if repl.)
+    zero: bool
+    path: WidePath
+    cache_defs: Any = None             # decode bundles only
+
+    def abstract_state(self):
+        defs = self.param_defs
+        params = tree_abstract(defs)
+        opt = {
+            "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        return {"params": params, "opt": opt}
+
+    def init_state(self, seed: int = 0):
+        params = tree_init(self.param_defs, seed)
+        return {"params": params, "opt": init_opt_state(params)}
+
+
+# ---------------------------------------------------------------------------
+# gather hook construction (ZeRO-3 all-gather-at-use)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _ag_use(x, dim):
+    """ZeRO-3 all-gather-at-use whose transpose reduce-scatters in f32.
+
+    The f32 backward is (a) better numerics for the gradient reduction and
+    (b) a workaround for an XLA-CPU CHECK-failure on sub-f32 reduce-scatter
+    inside partial-manual shard_map (AllReducePromotion bug).
+    """
+    return jax.lax.all_gather(x, "data", axis=dim, tiled=True)
+
+
+def _ag_fwd(x, dim):
+    return _ag_use(x, dim), jnp.zeros((0,), x.dtype)
+
+
+def _ag_bwd(dim, res, g):
+    rs = jax.lax.psum_scatter(g.astype(jnp.float32), "data",
+                              scatter_dimension=dim, tiled=True)
+    return (rs.astype(res.dtype),)
+
+
+_ag_use.defvjp(_ag_fwd, _ag_bwd)
+
+
+def _make_gather(defs, dims_tree, zero: bool, has_data_axis: bool):
+    """Returns (gather_layer, gather_top).
+
+    gather_layer(lp): applied by models inside the layer scan; matched to the
+    right dims subtree by pytree structure.
+    gather_top(params): gathers non-scanned leaves (embed/head/norms/shared).
+    """
+    if not zero or not has_data_axis:
+        return None, lambda p: p
+
+    tables = []
+    for key in ("blocks", "encoder"):
+        if isinstance(defs, dict) and key in defs:
+            src = dims_tree[key]
+            if key == "encoder":  # ln_f is applied outside the layer scan
+                src = {k: v for k, v in src.items() if k != "ln_f"}
+            sub = _strip_layer_dim(src)
+            leaves, td = jax.tree.flatten(sub)
+            tables.append((td, leaves))
+
+    def gather_leaf(x, d):
+        if d is None or d == NOFSDP:
+            return x
+        return _ag_use(x, d)
+
+    def gather_layer(lp):
+        leaves, td = jax.tree.flatten(lp)
+        for td_ref, dsub in tables:
+            if td == td_ref:
+                return jax.tree.unflatten(
+                    td, [gather_leaf(x, d) for x, d in zip(leaves, dsub)])
+        raise ValueError(f"gather: unknown layer structure {td}")
+
+    def gather_top(params):
+        out = {}
+        for k, v in params.items():
+            if k == "blocks":
+                out[k] = v
+            elif k == "encoder":
+                enc = dict(v)
+                dl = jax.tree.leaves({"ln_f": dims_tree[k]["ln_f"]},
+                                     is_leaf=lambda x: x is None)
+                enc["ln_f"] = gather_leaf(v["ln_f"], dl[0])
+                out[k] = enc
+            else:
+                out[k] = _map_with_dims(gather_leaf, v, dims_tree[k])
+        return out
+
+    return gather_layer, gather_top
+
+
+def _map_with_dims(fn, tree, dims):
+    dim_leaves = jax.tree.leaves(dims, is_leaf=lambda x: x is None)
+    leaves, td = jax.tree.flatten(tree)
+    return jax.tree.unflatten(td, [fn(x, d) for x, d in zip(leaves, dim_leaves)])
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(rc: RunConfig, mesh) -> StepBundle:
+    model = build_model(rc.model)
+    defs = model.param_defs()
+    manual = set(dp_axes_of(mesh))
+    tp = int(mesh.shape.get("model", 1))
+    data_size = int(mesh.shape.get("data", 1))
+    zero = bool(rc.train.zero1 and rc.comm.mode == "hierarchical"
+                and "data" in manual and data_size > 1)
+    fsdp_axes = ("data",) if zero else ()
+    dims = tree_fsdp_dims(defs, data_size, tp)
+    nones = jax.tree.map(lambda d: None, dims, is_leaf=lambda x: x is None)
+
+    param_specs = tree_specs(defs, fsdp_axes=fsdp_axes,
+                             fsdp_size=data_size if zero else 1, tp_size=tp)
+    opt_specs = {"m": param_specs, "v": param_specs, "step": P()}
+    state_specs = {"params": param_specs, "opt": opt_specs}
+
+    dp = tuple(a for a in ("pod", "data") if a in manual)
+    batch_specs = jax.tree.map(lambda _: P(dp), _batch_template(rc))
+
+    # MPWide path over the pod axis (autotuned to the cross-pod payload)
+    path = WidePath(axis="pod", comm=rc.comm, link=INTERPOD)
+    payload = _param_bytes(defs) // (data_size if zero else 1)
+    path = autotune_path(path, payload, world=int(mesh.shape.get("pod", 1)))
+
+    gather_layer, gather_top = _make_gather(defs, dims, zero, "data" in manual)
+    dp_world = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
+    dims_or_none = dims if zero else nones
+    tc = rc.train
+    m_micro = max(1, tc.microbatches)
+
+    def _cross_pod(grads):
+        if rc.comm.compress == "none" or tp <= 1:
+            return streamed_psum(grads, path, dims=dims)
+        # compressed transfers quantize/pad/gather — GSPMD propagation
+        # through those ops replicates the "model"-sharded dims (§Perf P8:
+        # 16x inflation); a nested fully-manual shard_map keeps every byte
+        # of the compressed path local.
+        grad_param_specs = param_specs
+        tp_specs = jax.tree.map(lambda s: _manual_part(s, {"model"}),
+                                grad_param_specs,
+                                is_leaf=lambda x: isinstance(x, P))
+        inner = jax.shard_map(
+            lambda g: streamed_psum(g, path, dims=dims),
+            in_specs=(tp_specs,), out_specs=tp_specs,
+            axis_names={"model"}, check_vma=False)
+        return inner(grads)
+
+    def sync(grads):
+        if rc.comm.mode == "flat":
+            return flat_allreduce(grads, dp)
+        if rc.comm.mode == "gateway":
+            return gateway_allreduce(grads, path, ("data",))
+        # hierarchical: replicated leaves still need the in-pod reduction
+        if zero:
+            if "data" in manual:
+                grads = _map_with_dims(
+                    lambda g, d: jax.lax.psum(g, "data") if d in (None, NOFSDP) else g,
+                    grads, dims)
+            return _cross_pod(grads)
+        from repro.core.collectives import hierarchical_allreduce
+        return hierarchical_allreduce(grads, path, ("data",), dims)
+
+    def loss_fn(params, mb):
+        p = gather_top(params)
+        return model.loss(p, mb, gather=gather_layer)
+
+    _vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grad_fn(p, mb):
+        # f32 gradients from here on: f32 accumulation numerics, and all
+        # syncs ship f32 (uniform wire dtype across comm modes; also avoids
+        # the XLA-CPU bf16-collective bug in partial-manual shard_map).
+        out, g = _vg(p, mb)
+        return out, jax.tree.map(lambda x: x.astype(jnp.float32), g)
+
+    def body(state, batch):
+        params = state["params"]
+        mbs = jax.tree.map(
+            lambda x: x.reshape((m_micro, x.shape[0] // m_micro) + x.shape[1:]),
+            batch)
+        loss, metrics, grads = accum_grads(
+            grad_fn, params, mbs,
+            sync=sync, dims=dims_or_none, overlap=m_micro > 1)
+        grads = jax.tree.map(lambda g: g / dp_world, grads)
+        lr = lr_at(state["opt"]["step"], tc)
+        new_params, new_opt, stats = adamw_update(
+            grads, state["opt"], params, tc, lr,
+            dims=dims_or_none, data_axes=dp)
+        if manual:
+            loss = jax.lax.psum(loss, tuple(manual)) / dp_world
+        out_metrics = {"loss": loss, "lr": lr, **stats,
+                       "aux_loss": metrics.get("aux_loss", jnp.float32(0.0))}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    if manual:
+        manual_state_specs = jax.tree.map(
+            lambda s: _manual_part(s, manual), state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        manual_batch_specs = jax.tree.map(lambda s: _manual_part(s, manual),
+                                          batch_specs,
+                                          is_leaf=lambda x: isinstance(x, P))
+        stepped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(manual_state_specs, manual_batch_specs),
+            out_specs=(manual_state_specs, P()),
+            axis_names=manual, check_vma=False)
+    else:
+        stepped = body
+
+    fn = jax.jit(
+        stepped,
+        in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                      jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs,
+                                   is_leaf=lambda x: isinstance(x, P))),
+        out_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                                    is_leaf=lambda x: isinstance(x, P)),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0,))
+    return StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
+                      state_specs=state_specs, batch_specs=batch_specs,
+                      dims=dims_or_none, zero=zero, path=path)
+
+
+def _batch_template(rc: RunConfig) -> dict:
+    tmpl = {"tokens": 0}
+    if rc.model.vision_tokens and rc.shape.kind != "decode":
+        tmpl["patch_embeds"] = 0
+    if rc.model.encoder_layers and rc.shape.kind != "decode":
+        tmpl["source_frames"] = 0
+    return tmpl
+
+
+def _param_bytes(defs) -> int:
+    total = 0
+    for pd in jax.tree.leaves(defs, is_leaf=is_pd_leaf):
+        total += leaf_bytes_pd(pd)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# serve step (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def cache_spec(pd: PD, *, batch_shardable: bool, tp: int, kv_heads: int,
+               dp: tuple = ("pod", "data")) -> P:
+    """Sharding for a cache leaf: batch over DP when divisible; the largest
+    TP-compatible dim over "model" (kv_heads when divisible, else seq)."""
+    entries: list = []
+    kv_ok = kv_heads % tp == 0 if tp > 1 else False
+    for a, s in zip(pd.axes, pd.shape):
+        if a == "batch":
+            entries.append(dp if (batch_shardable and dp) else None)
+        elif a == "kv_heads" and kv_ok:
+            entries.append("model")
+        elif a == "seq" and not kv_ok and s % max(tp, 1) == 0:
+            entries.append("model")
+        elif a in ("ssm_heads", "conv_ch") and s % max(tp, 1) == 0:
+            entries.append("model")
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def build_serve_step(rc: RunConfig, mesh, kind: Optional[str] = None) -> StepBundle:
+    """kind: "decode" (one token against a seq_len cache) or "prefill".
+
+    Serving keeps params replicated over "data" whenever the TP-sharded
+    copy fits HBM — the ZeRO layout would re-gather every layer's weights
+    each decoded token (§Perf P4: decode was collective-bound purely on
+    those gathers).  Only models whose TP shard exceeds the budget (dbrx)
+    stay scattered.
+    """
+    kind = kind or rc.shape.kind
+    model = build_model(rc.model)
+    defs = model.param_defs()
+    manual = set(dp_axes_of(mesh))
+    tp = int(mesh.shape.get("model", 1))
+    data_size = int(mesh.shape.get("data", 1))
+    tp_shard_bytes = 2 * rc.model.param_count() // max(tp, 1)
+    needs_zero = tp_shard_bytes > 8 * 2**30
+    zero = bool(needs_zero and rc.train.zero1 and "data" in manual
+                and data_size > 1)
+    dims = tree_fsdp_dims(defs, data_size, tp)
+    param_specs = tree_specs(defs, fsdp_axes=("data",) if zero else (),
+                             fsdp_size=data_size if zero else 1, tp_size=tp)
+    gather_layer, gather_top = _make_gather(defs, dims, zero, "data" in manual)
+
+    B, S = rc.shape.global_batch, rc.shape.seq_len
+    dp_world = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
+    batch_shardable = B % max(dp_world, 1) == 0 and B >= dp_world and dp_world > 1
+    dp = tuple(a for a in ("pod", "data") if a in manual)
+    bspec = P(dp) if batch_shardable else P()
+
+    if kind == "decode":
+        cache_defs = model.cache_defs(B, S)
+        cache_specs = jax.tree.map(
+            lambda pd: cache_spec(pd, batch_shardable=batch_shardable, tp=tp,
+                                  kv_heads=max(rc.model.num_kv_heads, 1),
+                                  dp=dp),
+            cache_defs, is_leaf=is_pd_leaf)
+
+        def body(params, cache, pos, tokens):
+            p = gather_top(params)
+            logits, new_cache = model.decode_step(p, cache, pos, tokens,
+                                                  gather=gather_layer)
+            return logits, new_cache
+
+        in_specs_manual = (
+            jax.tree.map(lambda s: _manual_part(s, manual), param_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: _manual_part(s, manual), cache_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            P(), _manual_part(bspec, manual))
+        out_specs_manual = (_manual_part(bspec, manual),
+                            jax.tree.map(lambda s: _manual_part(s, manual),
+                                         cache_specs,
+                                         is_leaf=lambda x: isinstance(x, P)))
+        stepped = jax.shard_map(body, mesh=mesh, in_specs=in_specs_manual,
+                                out_specs=out_specs_manual,
+                                axis_names=manual, check_vma=False) if manual else body
+        shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                       is_leaf=lambda x: isinstance(x, P))
+        fn = jax.jit(stepped,
+                     in_shardings=(shard(param_specs), shard(cache_specs),
+                                   NamedSharding(mesh, P()), shard(bspec)),
+                     out_shardings=(shard(bspec), shard(cache_specs)),
+                     donate_argnums=(1,))
+        bundle = StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
+                            state_specs={"params": param_specs, "cache": cache_specs},
+                            batch_specs={"tokens": bspec}, dims=dims, zero=zero,
+                            path=WidePath(axis="pod", comm=rc.comm))
+        bundle.cache_defs = cache_defs
+        return bundle
+
+    # prefill
+    def body(params, batch):
+        p = gather_top(params)
+        return model.prefill(p, batch, gather=gather_layer)
+
+    batch_specs = jax.tree.map(lambda _: bspec, _batch_template(rc))
+    # cache leaves all carry batch at dim 1: (layers/sites, B, ...)
+    cspec = P(None, dp) if batch_shardable else P()
+    from repro.models.registry import batch_abstract
+    _, cache_shape = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, gather=None),
+        tree_abstract(defs), batch_abstract(rc.model, rc.shape))
+    cache_specs_out = jax.tree.map(lambda _: cspec, cache_shape)
+    if manual:
+        stepped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda s: _manual_part(s, manual), param_specs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                      jax.tree.map(lambda s: _manual_part(s, manual), batch_specs,
+                                   is_leaf=lambda x: isinstance(x, P))),
+            out_specs=(_manual_part(bspec, manual),
+                       jax.tree.map(lambda s: _manual_part(s, manual),
+                                    cache_specs_out,
+                                    is_leaf=lambda x: isinstance(x, P))),
+            axis_names=manual, check_vma=False)
+    else:
+        stepped = body
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(stepped, in_shardings=(shard(param_specs), shard(batch_specs)),
+                 out_shardings=(shard(bspec), shard(cache_specs_out)))
+    return StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
+                      state_specs={"params": param_specs},
+                      batch_specs=batch_specs, dims=dims, zero=zero,
+                      path=WidePath(axis="pod", comm=rc.comm))

@@ -1,0 +1,118 @@
+"""Mesh-aware sharding helpers.
+
+Model code calls :func:`constrain` with *intent* (which logical mesh axes a
+dim belongs to); the helper silently drops axes that are absent from the
+current mesh (e.g. ``"pod"`` on a single-pod mesh) or that are *manual* in the
+enclosing ``shard_map`` (where GSPMD must not see them).  Outside any mesh the
+helpers are no-ops, so the same model code runs in single-device smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+DP_AXES: tuple[str, ...] = ("pod", "data")   # data-parallel axes (outer first)
+TP_AXIS: str = "model"                        # tensor/expert-parallel axis
+
+AxisEntry = Union[None, str, Sequence[str]]
+
+
+def _auto_axes() -> set[str]:
+    """Mesh axes GSPMD may shard over (present and not shard_map-manual)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return set()
+    if m is None:
+        return set()
+    names = getattr(m, "axis_names", ()) or ()
+    if not names:
+        return set()
+    types = getattr(m, "axis_types", None)
+    out = set()
+    for i, n in enumerate(names):
+        t = types[i] if types is not None and i < len(types) else None
+        if t is not None and "Manual" in str(t):
+            continue
+        out.add(n)
+    return out
+
+
+def filter_spec(*entries: AxisEntry) -> Optional[P]:
+    """Build a PartitionSpec keeping only currently-usable axes.
+
+    Returns None when no axis survives (caller should skip the constraint).
+    """
+    usable = _auto_axes()
+    if not usable:
+        return None
+    fixed: list[AxisEntry] = []
+    nontrivial = False
+    for e in entries:
+        if e is None:
+            fixed.append(None)
+        elif isinstance(e, str):
+            if e in usable:
+                fixed.append(e)
+                nontrivial = True
+            else:
+                fixed.append(None)
+        else:
+            kept = tuple(a for a in e if a in usable)
+            if kept:
+                fixed.append(kept if len(kept) > 1 else kept[0])
+                nontrivial = True
+            else:
+                fixed.append(None)
+    if not nontrivial:
+        return None
+    return P(*fixed)
+
+
+def constrain(x: jax.Array, *entries: AxisEntry) -> jax.Array:
+    """`with_sharding_constraint` that degrades gracefully.
+
+    ``constrain(x, DP_AXES, None, TP_AXIS)`` shards dim0 over ("pod","data")
+    and dim2 over "model" — on whatever subset of those axes exists and is
+    GSPMD-visible right now.
+    """
+    spec = filter_spec(*entries)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def manual_axes_present(*names: str) -> tuple[str, ...]:
+    """Which of `names` are *manual* axes right now (i.e. usable by explicit
+    collectives like psum/ppermute). Inside shard_map, only the axes in
+    `axis_names` qualify; auto axes would raise 'unbound axis name'."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    axis_names = getattr(m, "axis_names", ()) or ()
+    types = getattr(m, "axis_types", None)
+    out = []
+    for i, n in enumerate(axis_names):
+        if n not in names:
+            continue
+        t = types[i] if types is not None and i < len(types) else None
+        if t is not None and "Manual" in str(t):
+            out.append(n)
+    return tuple(n for n in names if n in out)
+
+
+def axis_size(name: str) -> int:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        names = list(getattr(m, "axis_names", ()) or ())
+        if name in names:
+            return int(m.shape[name])
+    except Exception:
+        pass
+    return 1

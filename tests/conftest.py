@@ -1,0 +1,37 @@
+"""Shared fixtures.
+
+NOTE: XLA_FLAGS / device counts are NOT set here (smoke tests must see the
+real single CPU device).  Multi-device tests run in subprocesses via
+`multidev` below.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def multidev():
+    """Run a snippet under N fake CPU devices; returns parsed RESULT json."""
+
+    def run(script: str, ndev: int = 8, timeout: int = 900) -> dict:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             text=True, capture_output=True, timeout=timeout,
+                             cwd=REPO)
+        for line in out.stdout.splitlines():
+            if line.startswith("RESULT:"):
+                return json.loads(line[len("RESULT:"):])
+        raise AssertionError(
+            f"no RESULT line (rc={out.returncode}):\n"
+            f"STDOUT:\n{out.stdout[-3000:]}\nSTDERR:\n{out.stderr[-3000:]}")
+
+    return run

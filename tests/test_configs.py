@@ -1,0 +1,120 @@
+"""Config registry invariants: published dims, param counts, smoke reduction
+preserves family structure, spec divisibility rules."""
+from __future__ import annotations
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_archs, smoke_config
+from repro.models import build_model
+from repro.models.param import is_pd_leaf, spec_for, tree_fsdp_dims, tree_specs
+
+import jax
+
+EXPECTED = {
+    "pixtral-12b": dict(num_layers=40, d_model=5120, num_heads=32,
+                        num_kv_heads=8, d_ff=14336, vocab_size=131072),
+    "h2o-danube-3-4b": dict(num_layers=24, d_model=3840, num_heads=32,
+                            num_kv_heads=8, d_ff=10240, vocab_size=32000,
+                            sliding_window=4096),
+    "llama3.2-3b": dict(num_layers=28, d_model=3072, num_heads=24,
+                        num_kv_heads=8, d_ff=8192, vocab_size=128256),
+    "qwen1.5-0.5b": dict(num_layers=24, d_model=1024, num_heads=16,
+                         num_kv_heads=16, d_ff=2816, vocab_size=151936,
+                         qkv_bias=True),
+    "qwen2.5-14b": dict(num_layers=48, d_model=5120, num_heads=40,
+                        num_kv_heads=8, d_ff=13824, vocab_size=152064,
+                        qkv_bias=True),
+    "dbrx-132b": dict(num_layers=40, d_model=6144, num_heads=48,
+                      num_kv_heads=8, d_ff=10752, vocab_size=100352),
+    "phi3.5-moe-42b-a6.6b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                 num_kv_heads=8, d_ff=6400, vocab_size=32064),
+    "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32,
+                        num_kv_heads=32, d_ff=8192, vocab_size=32000),
+    "mamba2-780m": dict(num_layers=48, d_model=1536, num_heads=0, d_ff=0,
+                        vocab_size=50280),
+    "whisper-medium": dict(num_layers=24, d_model=1024, num_heads=16,
+                           num_kv_heads=16, d_ff=4096, vocab_size=51865,
+                           encoder_layers=24),
+}
+
+PARAM_BILLIONS = {
+    "pixtral-12b": (11.0, 13.5), "h2o-danube-3-4b": (3.5, 4.5),
+    "llama3.2-3b": (2.8, 3.7), "qwen1.5-0.5b": (0.4, 0.55),
+    "qwen2.5-14b": (13.5, 16.0), "dbrx-132b": (125, 138),
+    "phi3.5-moe-42b-a6.6b": (39, 45), "zamba2-1.2b": (1.0, 1.4),
+    "mamba2-780m": (0.7, 0.9), "whisper-medium": (0.7, 1.1),
+}
+
+
+def test_all_archs_registered():
+    assert len(list_archs()) == 10
+    assert set(EXPECTED) == set(list_archs())
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_published_dims(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", sorted(PARAM_BILLIONS))
+def test_param_counts_in_range(arch):
+    lo, hi = PARAM_BILLIONS[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert 5.5 <= phi.active_param_count() / 1e9 <= 7.5     # a6.6b
+    dbrx = get_config("dbrx-132b")
+    assert 33 <= dbrx.active_param_count() / 1e9 <= 40      # 36B active
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_smoke_preserves_family(arch):
+    full, small = get_config(arch), smoke_config(get_config(arch))
+    assert small.family == full.family
+    assert (small.moe is None) == (full.moe is None)
+    assert (small.ssm is None) == (full.ssm is None)
+    assert bool(small.sliding_window) == bool(full.sliding_window)
+    assert bool(small.qkv_bias) == bool(full.qkv_bias)
+    assert bool(small.encoder_layers) == bool(full.encoder_layers)
+    if full.num_heads and full.num_kv_heads != full.num_heads:
+        assert small.num_kv_heads < small.num_heads  # GQA stays grouped
+    assert small.param_count() < 5e6
+
+
+def test_cell_matrix_counts():
+    ok = skip = 0
+    for a in list_archs():
+        for s in SHAPES.values():
+            good, why = cell_applicable(get_config(a), s)
+            ok += good
+            skip += not good
+            if not good:
+                assert s.name == "long_500k" and why
+    assert (ok, skip) == (33, 7)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_specs_divisible_on_production_mesh(arch):
+    """Every param spec must be valid for a 16-way TP, 16-way FSDP mesh —
+    dims not divisible must have been left unsharded."""
+    cfg = get_config(arch)
+    defs = build_model(cfg).param_defs()
+    specs = tree_specs(defs, fsdp_axes=("data",), fsdp_size=16, tp_size=16)
+    flat_defs = jax.tree.leaves(defs, is_leaf=is_pd_leaf)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    axis_size = {"model": 16, "data": 16}
+    for pd, spec in zip(flat_defs, flat_specs):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            div = 1
+            for a in axes:
+                div *= axis_size[a]
+            assert pd.shape[dim] % div == 0, (arch, pd.shape, spec)
