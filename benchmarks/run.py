@@ -11,13 +11,14 @@ import traceback
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig1,bloodflow,streams,roofline")
+                    help="comma list: table1,fig1,bloodflow,streams,autotune,roofline")
     args = ap.parse_args()
     sections = {
         "table1": ("benchmarks.table1_throughput", "Table 1 WAN throughput"),
         "fig1": ("benchmarks.fig1_steptime", "Fig 1 distributed overhead"),
         "bloodflow": ("benchmarks.overlap_bloodflow", "bloodflow latency hiding"),
         "streams": ("benchmarks.streams_sweep", "streams sweep"),
+        "autotune": ("benchmarks.autotune_convergence", "online autotune convergence"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)

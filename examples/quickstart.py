@@ -3,7 +3,8 @@
 1. build a WidePath over the "pod" axis (a WAN-class link),
 2. let the autotuner pick streams/chunks (paper: autotune on by default),
 3. all-reduce a payload through it inside a training-style shard_map,
-4. exchange point-to-point messages with the ring API (MPW_SendRecv).
+4. exchange point-to-point messages with the ring API (MPW_SendRecv),
+5. read back per-path telemetry (MPW_PathStats / MPW_Report).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (uses 8 fake CPU devices; real deployments use the production mesh)
@@ -66,6 +67,16 @@ def main():
     with jax.set_mesh(mesh):
         recv = g(jnp.zeros((2, 4)))
     print(f"MPW_ISendRecv ring: pod0 received from pod1: {float(recv[0, 0])}")
+
+    # --- 5: telemetry ------------------------------------------------------
+    # host loops feed measured wall times back; here one timed eager call
+    import time
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        jax.block_until_ready(g(jnp.zeros((2, 4))))
+    mpw.Observe(pid, time.perf_counter() - t0)
+    print("\nMPW_Report (per-path stats):")
+    print(mpw.Report(formatted=True))
     mpw.Finalize()
     print("quickstart OK")
 

@@ -1,0 +1,205 @@
+"""Run WideJAX's modern JAX API surface on older jaxlib (0.4.x).
+
+The codebase targets the current public API:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., axis_names=...,
+    check_vma=...)`` (partial-manual over named axes),
+  * ``jax.set_mesh(mesh)`` as the ambient-mesh context manager,
+  * ``jax.make_mesh(..., axis_types=...)`` and ``jax.sharding.AxisType``,
+  * ``jax.sharding.get_abstract_mesh()`` for axis introspection.
+
+On jax 0.4.x those spell ``jax.experimental.shard_map.shard_map(f, mesh,
+in_specs, out_specs, check_rep=..., auto=...)`` with no ambient-mesh or
+abstract-mesh tracking.  :func:`install` bridges the gap by installing thin
+adapters onto the ``jax`` namespace the first time ``repro`` is imported;
+on a new-enough JAX it is a no-op.  Only behaviours this repo relies on are
+emulated — this is a shim, not a polyfill of the full new API.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+import threading
+
+import jax
+
+_state = threading.local()          # .meshes: stack from set_mesh
+_last_mesh = None                   # process-wide fallback (single-mesh runs)
+
+
+def _mesh_stack() -> list:
+    if not hasattr(_state, "meshes"):
+        _state.meshes = []
+    return _state.meshes
+
+
+def _physical_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _ambient_mesh():
+    stack = _mesh_stack()
+    return (stack[-1] if stack else None) or _physical_mesh() or _last_mesh
+
+
+def _manual_axis_sizes() -> dict:
+    """{axis name: size} for the named (manual) axes of the current trace."""
+    try:
+        from jax._src import core as jcore
+        env = jcore.get_axis_env()
+        sizes = getattr(env, "axis_sizes", None)
+        if sizes is not None:
+            return {n: s for n, s in sizes.items() if isinstance(n, str)}
+    except Exception:
+        pass
+    return {}
+
+
+class _CompatAbstractMesh:
+    """Duck-type of the new AbstractMesh: axis_names / axis_types / shape."""
+
+    def __init__(self, names, types, sizes):
+        self.axis_names = tuple(names)
+        self.axis_types = tuple(types)
+        self.shape = dict(sizes)
+
+    def __bool__(self) -> bool:
+        return bool(self.axis_names)
+
+
+def install() -> None:
+    # each symbol is patched only when missing, so a JAX that already has
+    # (say) a native jax.shard_map keeps it even if other pieces need shims
+    if (hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")
+            and hasattr(jax.sharding, "get_abstract_mesh")):
+        return  # new JAX: nothing to do
+
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+    from jax.sharding import Mesh
+
+    # -- jax.sharding.AxisType ------------------------------------------------
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+        jax.sharding.AxisType = AxisType
+    _AxisType = jax.sharding.AxisType
+
+    # -- jax.make_mesh(..., axis_types=...) ----------------------------------
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            # 0.4.x meshes are untyped; axis types resurface via the
+            # get_abstract_mesh shim (manual = axes bound by shard_map).
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # -- jax.set_mesh ---------------------------------------------------------
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        global _last_mesh
+        _mesh_stack().append(mesh)
+        _last_mesh = mesh
+        # entering the physical mesh gives with_sharding_constraint a
+        # resource env, so bare PartitionSpecs work under set_mesh
+        ctx = mesh if isinstance(mesh, Mesh) else contextlib.nullcontext()
+        try:
+            with ctx:
+                yield mesh
+        finally:
+            _mesh_stack().pop()
+
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+
+    # -- jax.shard_map --------------------------------------------------------
+    def shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                  axis_names=None, check_vma=None, check_rep=None,
+                  auto=None, **_ignored):
+        if f is None:  # decorator form
+            return lambda g: shard_map(g, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs,
+                                       axis_names=axis_names,
+                                       check_vma=check_vma,
+                                       check_rep=check_rep, auto=auto)
+        def bind(*args):
+            global _last_mesh
+            # nested shard_map whose axes this trace already binds (the
+            # fully-manual compat mode below binds every mesh axis): calling
+            # the body inline is the consistent interpretation — its
+            # collectives over those axes are already legal here.
+            manual_now = set(_manual_axis_sizes())
+            if axis_names is not None and set(axis_names) <= manual_now:
+                return f(*args)
+            m = mesh if mesh is not None else _ambient_mesh()
+            if m is None:
+                raise RuntimeError(
+                    "compat.shard_map: no mesh given and no ambient mesh; "
+                    "wrap the call in `with jax.set_mesh(mesh):` on this "
+                    "jax version")
+            _last_mesh = m if isinstance(m, Mesh) else _last_mesh
+            # Bind ALL mesh axes manual (auto=()): 0.4.x XLA-CPU cannot SPMD-
+            # partition the PartitionId ops partial-auto emits for
+            # axis_index.  Specs never mention the would-be-auto axes, so
+            # they replicate inside the body — numerically identical, only
+            # the GSPMD sharding *hints* are lost (constrain() no-ops).
+            check = check_vma if check_vma is not None else check_rep
+            return _old_shard_map(f, mesh=m, in_specs=in_specs,
+                                  out_specs=out_specs, check_rep=bool(check),
+                                  auto=frozenset())(*args)
+
+        return bind
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+
+    # -- jax.lax.axis_size ----------------------------------------------------
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            sizes = _manual_axis_sizes()
+            names = (axis_name if isinstance(axis_name, (tuple, list))
+                     else (axis_name,))
+            n = 1
+            for a in names:
+                if a not in sizes:
+                    raise NameError(f"unbound axis name: {a}")
+                n *= sizes[a]
+            return n
+
+        jax.lax.axis_size = axis_size
+
+    # -- jax.sharding.get_abstract_mesh --------------------------------------
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        def get_abstract_mesh():
+            manual = _manual_axis_sizes()
+            mesh = _ambient_mesh()
+            names, types, sizes = [], [], {}
+            if mesh is not None:
+                for n in mesh.axis_names:
+                    names.append(n)
+                    sizes[n] = int(mesh.shape[n])
+                    types.append(_AxisType.Manual if n in manual
+                                 else _AxisType.Auto)
+            for n, s in manual.items():
+                if n not in sizes:
+                    names.append(n)
+                    sizes[n] = int(s)
+                    types.append(_AxisType.Manual)
+            return _CompatAbstractMesh(names, types, sizes)
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+
+install()

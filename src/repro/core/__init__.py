@@ -1,6 +1,13 @@
-"""MPWide core: paths, streamed collectives, autotuner, relay, MPW_* API."""
+"""MPWide core: paths, streamed collectives, autotuner, telemetry, relay,
+MPW_* API."""
 from repro.core.api import MPW  # noqa: F401
-from repro.core.autotune import Tuning, autotune_path, tune  # noqa: F401
+from repro.core.autotune import (  # noqa: F401
+    OnlineTuner,
+    Tuning,
+    autotune_path,
+    simulate_transfer_s,
+    tune,
+)
 from repro.core.collectives import (  # noqa: F401
     flat_allreduce,
     gateway_allreduce,
@@ -11,3 +18,4 @@ from repro.core.collectives import (  # noqa: F401
 from repro.core.cycle import barrier, cycle, pod_shift, relay, sendrecv  # noqa: F401
 from repro.core.overlap import accum_grads  # noqa: F401
 from repro.core.path import ICI, INTERPOD, LinkSpec, WidePath, local_path  # noqa: F401
+from repro.core.telemetry import PathTelemetry, Telemetry, get_telemetry  # noqa: F401

@@ -17,6 +17,7 @@ Differences from the C++ API, by necessity of the platform:
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -25,21 +26,28 @@ import jax.numpy as jnp
 
 from repro.configs.base import CommConfig
 from repro.core import cycle as cy
-from repro.core.autotune import autotune_path
+from repro.core.autotune import OnlineTuner, autotune_path
 from repro.core.collectives import streamed_psum
 from repro.core.path import INTERPOD, WidePath
+from repro.core.telemetry import get_telemetry
 
 
 @dataclass
 class _PathState:
     path: WidePath
+    tuner: Optional[OnlineTuner] = None
+
+
+# process-wide path ids: telemetry keys ("mpw{pid}:{link}") must stay unique
+# across MPW sessions, or a new session's stats would merge into an old
+# session's registry slot
+_PATH_IDS = itertools.count()
 
 
 @dataclass
 class MPW:
     """One MPWide session (MPW_Init .. MPW_Finalize)."""
     paths: dict[int, _PathState] = field(default_factory=dict)
-    _next: int = 0
 
     # -- lifecycle ---------------------------------------------------------
     @staticmethod
@@ -53,9 +61,9 @@ class MPW:
     def CreatePath(self, axis: str = "pod", nstreams: int = 32,
                    link=INTERPOD, comm: Optional[CommConfig] = None) -> int:
         comm = comm or CommConfig(streams=nstreams)
-        pid = self._next
-        self._next += 1
-        self.paths[pid] = _PathState(WidePath(axis=axis, comm=comm, link=link))
+        pid = next(_PATH_IDS)
+        self.paths[pid] = _PathState(
+            WidePath(axis=axis, comm=comm, link=link, name=f"mpw{pid}"))
         return pid
 
     def DestroyPath(self, pid: int) -> None:
@@ -76,11 +84,58 @@ class MPW:
         self.setChunkSize(pid, nbytes)
 
     def setAutoTuning(self, pid: int, enabled: bool,
-                      payload_bytes: Optional[int] = None) -> None:
-        p = self.paths[pid].path.with_(autotune=enabled)
+                      payload_bytes: Optional[int] = None, *,
+                      online: bool = True, window: int = 5) -> None:
+        """MPW_setAutoTuning (paper: on by default).
+
+        With `payload_bytes` the path gets the model-based warm start
+        (alpha-beta optimum for that payload).  With `online` (beyond the C
+        API) an :class:`OnlineTuner` is attached: feed measured seconds via
+        :meth:`Observe` and the path re-tunes itself every `window` samples.
+        """
+        st = self.paths[pid]
+        p = st.path.with_(autotune=enabled)
         if enabled and payload_bytes:
             p = autotune_path(p, payload_bytes)
-        self.paths[pid].path = p
+        st.path = p
+        if enabled and online:
+            st.tuner = OnlineTuner(streams=p.streams,
+                                   chunk_mb=p.comm.chunk_mb,
+                                   pacing=p.comm.pacing, window=window)
+        else:
+            st.tuner = None
+
+    def Observe(self, pid: int, seconds: float,
+                nbytes: Optional[int] = None) -> bool:
+        """Feed one measured transfer/step time for a path (beyond the C
+        API; the paper's library measures inside its own send loop — here
+        transfers execute inside jitted steps, so the host reports times).
+
+        Records the sample in telemetry and, when autotuning is on, advances
+        the online controller.  Returns True when the path was re-tuned —
+        callers holding compiled executables should rebuild on True.
+        """
+        st = self.paths[pid]
+        get_telemetry().record(st.path.key, seconds, nbytes=nbytes)
+        if st.tuner is None:
+            return False
+        cfg = st.tuner.observe(seconds)
+        if cfg is None:
+            return False
+        st.path = st.path.with_(**cfg)
+        get_telemetry().path(st.path.key).note_retune(None, cfg)
+        return True
+
+    # -- telemetry (beyond the C API; the paper's mpwtest diagnostics) -------
+    def PathStats(self, pid: int) -> dict:
+        """Per-path stats: plan shape, transfer counts, achieved GB/s."""
+        return get_telemetry().path(self.paths[pid].path.key).summary()
+
+    def Report(self, formatted: bool = False):
+        """All per-path stats recorded in this process (facade paths and the
+        runtime loops' train/serve paths alike)."""
+        t = get_telemetry()
+        return t.format_report() if formatted else t.report()
 
     # -- data movement ------------------------------------------------------
     def Send(self, pid: int, tree, shift: int = 1):

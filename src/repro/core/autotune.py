@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from statistics import median
+from typing import Optional
 
 from repro.core.path import LinkSpec, WidePath
 
@@ -94,3 +96,179 @@ def autotune_path(path: WidePath, nbytes: int, *, world: int = 2,
     t = tune(nbytes, path.link, world=world, compute_window=compute_window)
     return path.with_(streams=t.streams,
                       chunk_mb=max(t.chunk_bytes / (1 << 20), 0.0625))
+
+
+# ---------------------------------------------------------------------------
+# online autotuner: measurement-driven hill climb over the path knobs
+# ---------------------------------------------------------------------------
+
+STREAM_GRID: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+CHUNK_GRID_MB: tuple[float, ...] = (0.0625, 0.25, 1.0, 2.0, 4.0, 8.0,
+                                    16.0, 32.0, 64.0)
+PACING_GRID: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+
+
+def _seed(grid: list, value) -> int:
+    """Index of `value` in `grid`, inserting it (sorted) when absent.
+
+    The warm start may sit off-grid (e.g. 23 streams / 5.7 MiB chunks from
+    the alpha-beta model); snapping it to a neighbour would make the tuner's
+    incumbent a config that was never measured.  Keeping the exact value as
+    a grid point means the first window's cost is booked against the config
+    actually running."""
+    if value not in grid:
+        grid.append(value)
+        grid.sort()
+    return grid.index(value)
+
+
+class OnlineTuner:
+    """First-improvement hill climb over (streams, chunk_mb, pacing) driven
+    by *measured* cost (wall seconds per step/transfer).
+
+    The model-based :func:`tune` gives a warm start; this controller closes
+    the loop the paper's autotuner closes over live TCP measurements.  The
+    caller feeds one cost sample per executed step via :meth:`observe`; every
+    `window` samples the tuner takes the median (robust to the recompile
+    spike after a knob change and to stragglers), compares it to the best
+    config seen, and either keeps climbing or reverts.
+
+    Moves are +-1 grid step per knob, plus the two (streams, chunk) diagonals
+    — streams and chunk size are coupled (a payload cut into fewer chunks
+    than streams cannot feed them), and the diagonal is the only improving
+    direction out of configs like (1 stream, one huge chunk).
+
+    `observe` returns the new knob dict to apply when the tuner wants a
+    config change, else None.  The tuner never raises mid-training: any cost
+    signal is accepted, convergence just stops proposing moves.
+    """
+
+    KNOBS = ("streams", "chunk_mb", "pacing")
+
+    def __init__(self, streams: int = 32, chunk_mb: float = 8.0,
+                 pacing: float = 1.0, *, window: int = 5, warmup: int = 1,
+                 rel_improvement: float = 0.02,
+                 tune_pacing: bool = True) -> None:
+        self.grids = {"streams": list(STREAM_GRID),
+                      "chunk_mb": list(CHUNK_GRID_MB),
+                      "pacing": list(PACING_GRID)}
+        # seeds stay exact for any value the transfer engine itself accepts
+        # (streams floor at 1, chunks at the 64 KiB engine floor, pacing
+        # clamps into [0,1] — all mirroring WidePath/streamed_psum), so the
+        # incumbent is always the config actually running
+        self.idx = {"streams": _seed(self.grids["streams"], max(1, int(streams))),
+                    "chunk_mb": _seed(self.grids["chunk_mb"],
+                                      max(0.0625, float(chunk_mb))),
+                    "pacing": _seed(self.grids["pacing"],
+                                    max(0.0, min(1.0, float(pacing))))}
+        self.window = max(1, int(window))
+        self.warmup = max(0, int(warmup))
+        self.rel = float(rel_improvement)
+        self.tune_pacing = tune_pacing
+        self.best_idx = dict(self.idx)
+        self.best_cost: Optional[float] = None
+        self.converged = False
+        self.history: list[tuple[dict, float]] = []   # (config, window cost)
+        self._samples: list[float] = []
+        self._skip = self.warmup      # drop compile/post-change cost spikes
+        self._moves: list[dict] = []
+
+    # -- public -------------------------------------------------------------
+    def config(self) -> dict:
+        return {k: self.grids[k][self.idx[k]] for k in self.KNOBS}
+
+    def best_config(self) -> dict:
+        return {k: self.grids[k][self.best_idx[k]] for k in self.KNOBS}
+
+    def observe(self, seconds: float) -> Optional[dict]:
+        """Feed one measured cost sample; returns knobs to apply or None."""
+        if self.converged:
+            return None
+        if self._skip > 0:
+            self._skip -= 1
+            return None
+        self._samples.append(float(seconds))
+        if len(self._samples) < self.window:
+            return None
+        cost = median(self._samples)
+        self._samples.clear()
+        return self._decide(cost)
+
+    # -- climb mechanics ----------------------------------------------------
+    def _decide(self, cost: float) -> Optional[dict]:
+        self.history.append((self.config(), cost))
+        improved = (self.best_cost is None
+                    or cost < self.best_cost * (1.0 - self.rel))
+        if improved:
+            self.best_cost = cost
+            self.best_idx = dict(self.idx)
+            self._moves = self._gen_moves()
+        return self._try_next()
+
+    def _gen_moves(self) -> list[dict]:
+        g = self.grids
+        moves = [{"streams": +1, "chunk_mb": -1},   # coupled diagonals first
+                 {"streams": +1}, {"chunk_mb": -1}, {"chunk_mb": +1},
+                 {"streams": -1}, {"streams": -1, "chunk_mb": +1}]
+        if self.tune_pacing:
+            moves += [{"pacing": -1}, {"pacing": +1}]
+        ok = []
+        for mv in moves:
+            if all(0 <= self.best_idx[k] + d < len(g[k]) for k, d in mv.items()):
+                ok.append(mv)
+        return ok
+
+    def _try_next(self) -> Optional[dict]:
+        if self._moves:
+            mv = self._moves.pop(0)
+            self.idx = dict(self.best_idx)
+            for k, d in mv.items():
+                self.idx[k] += d
+            self._skip = self.warmup
+            return self.config()
+        # no untried neighbour beats the incumbent: settle on it
+        self.converged = True
+        if self.idx != self.best_idx:
+            self.idx = dict(self.best_idx)
+            return self.config()
+        return None
+
+
+# ---------------------------------------------------------------------------
+# synthetic link: a measurement generator for convergence tests/benchmarks
+# ---------------------------------------------------------------------------
+
+def simulate_transfer_s(nbytes: float, link: LinkSpec, *, streams: int,
+                        chunk_bytes: float, pacing: float = 1.0,
+                        stream_setup_s: float = 1.5e-4,
+                        compute_s: float = 0.0,
+                        jitter: float = 0.0, seed: int = 0) -> float:
+    """Wall seconds to ship `nbytes` over `link` with the given knobs.
+
+    The landscape has the couplings real paths have: per-stream window caps
+    (too few streams starve a WAN), per-stream setup cost (too many streams
+    pay host overhead), per-chunk launch latency serialized within a stream
+    (too-small chunks), and streams starved when the payload yields fewer
+    chunks than streams (too-large chunks).  `jitter` adds deterministic
+    pseudo-noise (LCG on `seed`) so tuner tests exercise the median filter.
+    """
+    chunk_bytes = max(1.0, float(chunk_bytes))
+    n_chunks = max(1, math.ceil(nbytes / chunk_bytes))
+    streams_used = max(1, min(int(streams), n_chunks))
+    in_flight = max(1, int(round(streams_used * min(1.0, max(0.0, pacing)))))
+    waves = math.ceil(streams_used / in_flight)
+    per_stream = (link.window / (2 * link.latency_s) if link.window
+                  else link.bandwidth_Bps)
+    agg = min(link.bandwidth_Bps, in_flight * per_stream)
+    wire = nbytes / agg + (waves - 1) * 2 * link.latency_s
+    chunks_per_stream = math.ceil(n_chunks / streams_used)
+    overhead = chunks_per_stream * link.latency_s + streams_used * stream_setup_s
+    t = wire + overhead + compute_s
+    if jitter:
+        t *= 1.0 + jitter * (_lcg01(seed) - 0.5)
+    return t
+
+
+def _lcg01(seed: int) -> float:
+    """Deterministic uniform [0,1) from an integer seed."""
+    return ((1103515245 * (seed + 12345) + 12345) % (1 << 31)) / float(1 << 31)

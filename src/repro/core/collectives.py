@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import compress as comp
 from repro.core import streams as st
+from repro.core import telemetry as tel
 from repro.core.path import WidePath
 from repro.sharding import manual_axes_present
 
@@ -62,6 +63,9 @@ def streamed_psum(tree, path: WidePath, dims=None):
                     for l, d in zip(leaves, dim_list)]
     chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
+    # trace-time: the plan is static per executable; record its shape once
+    tel.note_plan(path.key, **st.plan_summary(
+        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
 
     # pacing: only ceil(streams * pacing) streams in flight per wave
     pace = max(0.0, min(1.0, float(path.comm.pacing)))

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import streams as st
+from repro.core import telemetry as tel
 from repro.core.path import WidePath
 from repro.sharding import manual_axes_present
 
@@ -34,6 +35,8 @@ def pod_shift(tree, path: WidePath, shift: int = 1):
     dims = [0 if l.ndim else None for l in leaves]
     chunks = st.plan_chunks(leaves, dims, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
+    tel.note_plan(path.key, **st.plan_summary(
+        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
     done: dict[int, list] = {i: [] for i in range(len(leaves))}
     for bucket in buckets:
         dep = jnp.zeros((), jnp.float32)

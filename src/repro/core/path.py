@@ -53,6 +53,7 @@ class WidePath:
     axis: str = "pod"
     comm: CommConfig = CommConfig()
     link: LinkSpec = INTERPOD
+    name: Optional[str] = None    # telemetry label (defaults to the axis)
 
     @property
     def streams(self) -> int:
@@ -62,9 +63,14 @@ class WidePath:
     def chunk_bytes(self) -> int:
         return max(1 << 16, int(self.comm.chunk_mb * (1 << 20)))
 
+    @property
+    def key(self) -> str:
+        """Registry key for this path's telemetry slot."""
+        return f"{self.name or self.axis}:{self.link.name}"
+
     def with_(self, **kw) -> "WidePath":
         comm_kw = {k: v for k, v in kw.items() if hasattr(self.comm, k)}
-        path_kw = {k: v for k, v in kw.items() if k in ("axis", "link")}
+        path_kw = {k: v for k, v in kw.items() if k in ("axis", "link", "name")}
         comm = replace(self.comm, **comm_kw) if comm_kw else self.comm
         return replace(self, comm=comm, **path_kw)
 

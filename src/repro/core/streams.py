@@ -61,6 +61,25 @@ def assign_streams(chunks: list[Chunk], streams: int) -> list[list[Chunk]]:
     return [b for b in buckets if b]
 
 
+def plan_summary(chunks: list[Chunk], buckets: list[list[Chunk]],
+                 streams_configured: int, chunk_bytes: int,
+                 pacing: float = 1.0) -> dict:
+    """Static traffic shape of a (chunks, buckets) plan, in the kwargs
+    telemetry.note_plan expects.  Works on abstract leaves (shapes only), so
+    the runtime can record plans at build time without devices."""
+    loads = [sum(c.nbytes for c in b) for b in buckets]
+    mean = (sum(loads) / len(loads)) if loads else 0.0
+    return dict(
+        payload_bytes=sum(c.nbytes for c in chunks),
+        n_chunks=len(chunks),
+        streams_used=len(buckets),
+        streams_configured=max(1, int(streams_configured)),
+        chunk_bytes=int(chunk_bytes),
+        pacing=float(pacing),
+        load_balance=(max(loads) / mean) if mean > 0 else 1.0,
+    )
+
+
 def slice_chunk(x: jax.Array, c: Chunk) -> jax.Array:
     if c.size == 0 or c.size == x.shape[c.dim]:
         return x

@@ -1,0 +1,215 @@
+"""Per-path transfer telemetry (the `mpwtest` diagnostics, made persistent).
+
+MPWide ships a runtime diagnostic (`mpwtest`) that measures what each path
+actually achieves so operators can tune stream counts and chunk sizes.  This
+module is that feedback channel for WideJAX: every :class:`WidePath` gets a
+:class:`PathTelemetry` slot in a process-global registry keyed by
+``path.key``, holding
+
+  * the **static plan** of the traffic the path carries (payload bytes per
+    transfer, chunk count, streams actually used vs. configured, pacing) —
+    recorded at trace/build time by ``streamed_psum`` / ``pod_shift`` /
+    ``build_train_step``, which is the honest place to capture it: inside a
+    jitted step individual transfers cannot be timed from the host;
+  * **measured samples** (wall seconds per executed step, bytes moved) —
+    recorded by the host-side loops (`runtime/train_loop.py`,
+    `runtime/serve_loop.py`, the benchmarks, or `MPW.Observe`), from which
+    achieved GB/s and step-time statistics derive;
+  * the **retune history** the online autotuner produced for the path.
+
+The registry is what `MPW.PathStats` / `MPW.Report` read, and what the
+:class:`~repro.core.autotune.OnlineTuner` consumes as its cost signal.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import asdict, dataclass, field
+from typing import Any, Optional
+
+
+@dataclass(frozen=True)
+class PlanInfo:
+    """Static shape of one transfer over a path (trace-time knowledge)."""
+    payload_bytes: int            # bytes shipped per transfer
+    n_chunks: int                 # chunks the payload is cut into
+    streams_used: int             # non-empty stream buckets
+    streams_configured: int       # path.streams (the knob)
+    chunk_bytes: int              # path.chunk_bytes (the knob)
+    pacing: float                 # fraction of streams in flight per wave
+    load_balance: float = 1.0     # max bucket load / mean bucket load
+
+    @property
+    def stream_utilization(self) -> float:
+        """Fraction of configured streams the plan can actually feed."""
+        if self.streams_configured <= 0:
+            return 1.0
+        return min(1.0, self.streams_used / self.streams_configured)
+
+
+@dataclass
+class PathTelemetry:
+    """Rolling stats for one path.  Mutators and readers synchronize on a
+    per-path lock: the train loop records while other threads (async
+    checkpoint writer, a monitoring thread calling MPW.Report) read."""
+    key: str
+    window: int = 256
+    plan: Optional[PlanInfo] = None
+    transfers: int = 0
+    total_bytes: int = 0
+    total_seconds: float = 0.0
+    samples: deque = field(default_factory=deque)   # (step, seconds, bytes)
+    retunes: list = field(default_factory=list)     # (step, {knob: value})
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def note_plan(self, **kw) -> None:
+        with self._lock:
+            self.plan = PlanInfo(**kw)
+
+    def note_retune(self, step: Optional[int], config: dict) -> None:
+        with self._lock:
+            self.retunes.append((step, dict(config)))
+
+    def record(self, seconds: float, nbytes: Optional[int] = None,
+               step: Optional[int] = None) -> None:
+        with self._lock:
+            if nbytes is None:
+                nbytes = self.plan.payload_bytes if self.plan else 0
+            self.transfers += 1
+            self.total_bytes += int(nbytes)
+            self.total_seconds += float(seconds)
+            self.samples.append((step, float(seconds), int(nbytes)))
+            while len(self.samples) > self.window:
+                self.samples.popleft()
+
+    # -- derived ------------------------------------------------------------
+    def achieved_Bps(self) -> float:
+        """Bytes/s over the rolling window (0 when nothing was timed)."""
+        with self._lock:
+            samples = list(self.samples)
+        secs = sum(s for _, s, _ in samples)
+        byts = sum(b for _, _, b in samples)
+        return byts / secs if secs > 0 else 0.0
+
+    def mean_seconds(self) -> float:
+        with self._lock:
+            samples = list(self.samples)
+        if not samples:
+            return 0.0
+        return sum(s for _, s, _ in samples) / len(samples)
+
+    def summary(self) -> dict[str, Any]:
+        with self._lock:
+            samples = list(self.samples)
+            out: dict[str, Any] = {
+                "key": self.key,
+                "transfers": self.transfers,
+                "total_bytes": self.total_bytes,
+                "total_seconds": self.total_seconds,
+                "retunes": list(self.retunes),
+            }
+            plan = self.plan
+        secs = sum(s for _, s, _ in samples)
+        byts = sum(b for _, _, b in samples)
+        out["window_mean_s"] = secs / len(samples) if samples else 0.0
+        out["achieved_GBps"] = (byts / secs if secs > 0 else 0.0) / 1e9
+        if plan is not None:
+            out["plan"] = asdict(plan)
+            out["stream_utilization"] = plan.stream_utilization
+        return out
+
+
+class Telemetry:
+    """Process-global registry of :class:`PathTelemetry`, keyed by path key.
+
+    Thread-safe: the async checkpoint writer and benchmark subprocesses may
+    record concurrently with the train loop.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._paths: dict[str, PathTelemetry] = {}
+
+    def path(self, key: str) -> PathTelemetry:
+        with self._lock:
+            if key not in self._paths:
+                self._paths[key] = PathTelemetry(key=key)
+            return self._paths[key]
+
+    def note_plan(self, key: str, **kw) -> None:
+        self.path(key).note_plan(**kw)
+
+    def record(self, key: str, seconds: float, nbytes: Optional[int] = None,
+               step: Optional[int] = None) -> None:
+        self.path(key).record(seconds, nbytes=nbytes, step=step)
+
+    @contextmanager
+    def timed(self, key: str, nbytes: Optional[int] = None,
+              step: Optional[int] = None):
+        """Time a host-side block and record it against a path."""
+        t0 = time.perf_counter()
+        yield
+        self.record(key, time.perf_counter() - t0, nbytes=nbytes, step=step)
+
+    def report(self) -> dict[str, dict]:
+        """{path key: summary dict} for every path seen this process."""
+        with self._lock:
+            paths = list(self._paths.items())   # snapshot: reset() may race
+        return {k: p.summary() for k, p in paths}
+
+    def format_report(self) -> str:
+        """Markdown table of the report (human-facing `MPW.Report`)."""
+        rep = self.report()
+        if not rep:
+            return "(no paths recorded)"
+        rows = ["| path | transfers | bytes/xfer | streams used/conf | "
+                "chunk | window mean | achieved |",
+                "|---|---|---|---|---|---|---|"]
+        for key in sorted(rep):
+            s = rep[key]
+            plan = s.get("plan")
+            if plan:
+                per = plan["payload_bytes"]
+                streams = f"{plan['streams_used']}/{plan['streams_configured']}"
+                chunk = _fmt_bytes(plan["chunk_bytes"])
+            else:
+                per = s["total_bytes"] / max(s["transfers"], 1)
+                streams, chunk = "-", "-"
+            rows.append(
+                f"| {key} | {s['transfers']} | {_fmt_bytes(per)} | {streams} "
+                f"| {chunk} | {s['window_mean_s']*1e3:.1f} ms "
+                f"| {s['achieved_GBps']:.3f} GB/s |")
+        return "\n".join(rows)
+
+    def reset(self, key: Optional[str] = None) -> None:
+        with self._lock:
+            if key is None:
+                self._paths.clear()
+            else:
+                self._paths.pop(key, None)
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit, div in (("GiB", 1 << 30), ("MiB", 1 << 20), ("KiB", 1 << 10)):
+        if n >= div:
+            return f"{n / div:.1f} {unit}"
+    return f"{int(n)} B"
+
+
+_GLOBAL = Telemetry()
+
+
+def get_telemetry() -> Telemetry:
+    return _GLOBAL
+
+
+# module-level conveniences (hot-path call sites stay one line)
+def note_plan(key: str, **kw) -> None:
+    _GLOBAL.note_plan(key, **kw)
+
+
+def record(key: str, seconds: float, nbytes: Optional[int] = None,
+           step: Optional[int] = None) -> None:
+    _GLOBAL.record(key, seconds, nbytes=nbytes, step=step)

@@ -75,7 +75,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, comm: CommConfig,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.launch.hlo_analysis import xla_cost
+    cost = xla_cost(compiled)
     hlo = compiled.as_text()
     # scan-aware analysis: XLA's cost_analysis counts while bodies once, so
     # layer-scanned models are undercounted ~L×; hlo_analysis multiplies by

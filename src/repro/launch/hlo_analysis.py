@@ -332,3 +332,15 @@ def analyze(text: str, pod_size: int = 256) -> HloCost:
     if entry:
         walk(entry, 1.0, True)
     return total
+
+
+def xla_cost(compiled) -> dict:
+    """compiled.cost_analysis() normalized to a flat dict.
+
+    Older jaxlib returns a one-element list of dicts; newer returns the dict
+    directly.  Callers index ["flops"] either way.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

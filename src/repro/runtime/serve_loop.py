@@ -1,6 +1,7 @@
 """Server: batched prefill + decode serving loop."""
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -11,6 +12,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import RunConfig
+from repro.core.telemetry import get_telemetry
 from repro.models.param import tree_init
 from repro.runtime.step import build_serve_step
 
@@ -36,6 +38,7 @@ class Server:
         sh = self._sh(self.bundle.state_specs["params"])
         params = params if params is not None else tree_init(self.bundle.param_defs, seed)
         self.params = jax.device_put(params, sh)
+        self._warm_shapes: set = set()   # batch sizes bundle.fn has compiled
 
     def _sh(self, specs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
@@ -56,8 +59,16 @@ class Server:
         tok = jax.device_put(jnp.asarray(prompt_tokens, jnp.int32),
                              self._sh(self.bundle.batch_specs["tokens"]))
         out = []
+        tele = get_telemetry()
+        path_key = self.bundle.path.key
         for i in range(max_new):
+            t0 = time.perf_counter()
             logits, cache = self.bundle.fn(self.params, cache, pos + i, tok)
             tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-            out.append(np.asarray(tok)[:, 0])
+            step_tok = np.asarray(tok)[:, 0]          # blocks on the step
+            if B in self._warm_shapes:
+                tele.record(path_key, time.perf_counter() - t0, step=i)
+            else:   # first call per batch shape is compile-dominated: skip
+                self._warm_shapes.add(B)
+            out.append(step_tok)
         return ServeResult(tokens=np.stack(out, axis=1), steps=max_new)

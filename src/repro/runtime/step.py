@@ -74,6 +74,7 @@ class StepBundle:
     zero: bool
     path: WidePath
     cache_defs: Any = None             # decode bundles only
+    replan: Any = None                 # re-notes this bundle's traffic plan
 
     def abstract_state(self):
         defs = self.param_defs
@@ -200,9 +201,19 @@ def build_train_step(rc: RunConfig, mesh) -> StepBundle:
     batch_specs = jax.tree.map(lambda _: P(dp), _batch_template(rc))
 
     # MPWide path over the pod axis (autotuned to the cross-pod payload)
-    path = WidePath(axis="pod", comm=rc.comm, link=INTERPOD)
+    path = WidePath(axis="pod", comm=rc.comm, link=INTERPOD, name="train")
     payload = _param_bytes(defs) // (data_size if zero else 1)
     path = autotune_path(path, payload, world=int(mesh.shape.get("pod", 1)))
+    replan = None
+    if rc.comm.mode != "flat":
+        # telemetry: the per-step traffic plan is known at build time (f32
+        # grads, ZeRO leaves scattered over "data"); recording it here keeps
+        # MPW.Report populated even on single-pod runs that never trace the
+        # cross-pod stage.  The bundle keeps the note as `replan` so a
+        # trainer swapping back to a cached bundle can refresh the registry.
+        replan = functools.partial(_note_path_plan, defs, dims, path,
+                                   data_size if zero else 1)
+        replan()
 
     gather_layer, gather_top = _make_gather(defs, dims, zero, "data" in manual)
     dp_world = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
@@ -301,7 +312,7 @@ def build_train_step(rc: RunConfig, mesh) -> StepBundle:
         donate_argnums=(0,))
     return StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
                       state_specs=state_specs, batch_specs=batch_specs,
-                      dims=dims_or_none, zero=zero, path=path)
+                      dims=dims_or_none, zero=zero, path=path, replan=replan)
 
 
 def _batch_template(rc: RunConfig) -> dict:
@@ -318,6 +329,30 @@ def _param_bytes(defs) -> int:
     for pd in jax.tree.leaves(defs, is_leaf=is_pd_leaf):
         total += leaf_bytes_pd(pd)
     return total
+
+
+def _note_path_plan(defs, dims, path: WidePath, shard: int) -> None:
+    """Record the path's static gradient-sync plan into telemetry.
+
+    Mirrors what streamed_psum will see: gradients are f32 on the wire, and
+    under ZeRO each scatterable leaf crosses pods as a 1/shard slice.
+    """
+    from repro.core import streams as st
+    from repro.core import telemetry as tel
+    leaves = jax.tree.leaves(tree_abstract(defs))
+    dim_leaves = jax.tree.leaves(dims, is_leaf=lambda x: x is None)
+    eff_leaves, eff_dims = [], []
+    for x, d in zip(leaves, dim_leaves):
+        d = None if d in (None, NOFSDP) else d
+        shape = list(x.shape)
+        if d is not None and shard > 1 and shape[d] % shard == 0:
+            shape[d] //= shard
+        eff_leaves.append(jax.ShapeDtypeStruct(tuple(shape), jnp.float32))
+        eff_dims.append(d if (d is not None and len(shape)) else None)
+    chunks = st.plan_chunks(eff_leaves, eff_dims, path.chunk_bytes)
+    buckets = st.assign_streams(chunks, path.streams)
+    tel.note_plan(path.key, **st.plan_summary(
+        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +446,7 @@ def build_serve_step(rc: RunConfig, mesh, kind: Optional[str] = None) -> StepBun
         bundle = StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
                             state_specs={"params": param_specs, "cache": cache_specs},
                             batch_specs={"tokens": bspec}, dims=dims, zero=zero,
-                            path=WidePath(axis="pod", comm=rc.comm))
+                            path=WidePath(axis="pod", comm=rc.comm, name="serve"))
         bundle.cache_defs = cache_defs
         return bundle
 
@@ -449,4 +484,4 @@ def build_serve_step(rc: RunConfig, mesh, kind: Optional[str] = None) -> StepBun
     return StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
                       state_specs={"params": param_specs},
                       batch_specs=batch_specs, dims=dims, zero=zero,
-                      path=WidePath(axis="pod", comm=rc.comm))
+                      path=WidePath(axis="pod", comm=rc.comm, name="serve"))

@@ -14,6 +14,7 @@ Fault-tolerance model (1000+-node design, §DESIGN.md):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -25,6 +26,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
+from repro.core.autotune import OnlineTuner
+from repro.core.telemetry import get_telemetry
 from repro.runtime.step import StepBundle, build_train_step
 
 
@@ -57,7 +60,8 @@ class StragglerDetector:
 class Trainer:
     def __init__(self, rc: RunConfig, mesh, *, ckpt_dir: Optional[str] = None,
                  replica_dir: Optional[str] = None, ckpt_every: int = 50,
-                 keep: int = 3, fault_hook: Optional[Callable[[int], None]] = None):
+                 keep: int = 3, fault_hook: Optional[Callable[[int], None]] = None,
+                 autotune_every: int = 0):
         self.rc = rc
         self.mesh = mesh
         self.bundle: StepBundle = build_train_step(rc, mesh)
@@ -70,6 +74,28 @@ class Trainer:
         self.state = None
         self.step = 0
         self.history: list[dict] = []
+        # online autotuning: every `autotune_every` steps the controller
+        # digests measured step times and may re-tune the WidePath (the step
+        # is rebuilt; compiled executables are cached per knob setting, so
+        # revisiting a config is free — the paper's "cache is the compiled
+        # executable" idiom applied to tuning).
+        self.tuner: Optional[OnlineTuner] = None
+        self._bundles: dict[tuple, StepBundle] = {}
+        # True whenever the *next* executed step pays XLA compilation — the
+        # initial build included; such samples are excluded from the
+        # straggler EWMA and telemetry
+        self._fresh_compile = True
+        if autotune_every and rc.comm.autotune and rc.comm.mode != "flat":
+            p = self.bundle.path
+            self.tuner = OnlineTuner(streams=p.streams,
+                                     chunk_mb=p.comm.chunk_mb,
+                                     pacing=p.comm.pacing,
+                                     window=autotune_every)
+            cfg0 = self.tuner.config()
+            if (cfg0["streams"] == p.streams
+                    and cfg0["chunk_mb"] == p.comm.chunk_mb
+                    and cfg0["pacing"] == p.comm.pacing):
+                self._bundles[self._cfg_key(cfg0)] = self.bundle
 
     # -- state management ----------------------------------------------------
     def _shardings(self):
@@ -115,7 +141,23 @@ class Trainer:
                 self._recover()
                 continue
             dt = time.perf_counter() - t0
-            straggler = self.detector.observe(self.step, dt)
+            if self._fresh_compile:
+                # first step on a newly built executable: dt is dominated by
+                # XLA compilation.  The tuner already discards it (warmup);
+                # keep it out of the straggler EWMA and telemetry too, or it
+                # both fires a bogus flag and inflates the variance enough
+                # to mask real stragglers afterwards.
+                self._fresh_compile = False
+                straggler = False
+            else:
+                straggler = self.detector.observe(self.step, dt)
+                if self.rc.comm.mode != "flat":   # flat: path carries nothing
+                    get_telemetry().record(self.bundle.path.key, dt,
+                                           step=self.step)
+            if self.tuner is not None:
+                new_cfg = self.tuner.observe(dt)
+                if new_cfg is not None:
+                    self._retune(new_cfg, log)
             rec = {"step": self.step,
                    "loss": float(metrics["loss"]),
                    "grad_norm": float(metrics["grad_norm"]),
@@ -133,6 +175,34 @@ class Trainer:
         if self.manager:
             self.manager.save(self.step, self.state, block=True)
         return self.history
+
+    # -- online autotuning ----------------------------------------------------
+    @staticmethod
+    def _cfg_key(cfg: dict) -> tuple:
+        return (cfg["streams"], cfg["chunk_mb"], cfg["pacing"])
+
+    def _retune(self, cfg: dict, log: Callable[[str], None] = print) -> None:
+        """Apply a controller-proposed path config: swap to the (cached or
+        freshly built) step executable for those knobs.
+
+        Only streams/chunk/pacing change, so state shardings are identical
+        across bundles and the live state tensors carry over untouched.
+        """
+        comm = dataclasses.replace(self.rc.comm, autotune=False, **cfg)
+        self.rc = dataclasses.replace(self.rc, comm=comm)
+        key = self._cfg_key(cfg)
+        if key not in self._bundles:
+            self._bundles[key] = build_train_step(self.rc, self.mesh)
+            self._fresh_compile = True   # next step pays XLA compilation
+        self.bundle = self._bundles[key]
+        if self.bundle.replan is not None:
+            # cache hit: building already noted the plan; a swap back to a
+            # cached config must re-note it or PathStats would keep
+            # describing the rejected (last-built) config
+            self.bundle.replan()
+        get_telemetry().path(self.bundle.path.key).note_retune(self.step, cfg)
+        log(f"[autotune] step {self.step}: trying streams={cfg['streams']} "
+            f"chunk={cfg['chunk_mb']}MiB pacing={cfg['pacing']}")
 
     def _recover(self):
         if not self.manager or self.manager.latest_step() is None:

@@ -1,0 +1,293 @@
+"""Online autotuner + telemetry subsystem.
+
+Convergence is tested against the synthetic link simulator (deterministic
+LCG noise) — the same landscape benchmarks/autotune_convergence.py reports
+on — plus the MPW facade loop (setAutoTuning/Observe/PathStats/Report) and
+the telemetry registry itself.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.api import MPW
+from repro.core.autotune import (CHUNK_GRID_MB, STREAM_GRID, OnlineTuner,
+                                 simulate_transfer_s)
+from repro.core.path import ICI, WAN_LONDON_POZNAN, WidePath
+from repro.core.telemetry import Telemetry, get_telemetry
+
+PAYLOAD = 64 << 20
+
+
+def _sweep_best(link, payload=PAYLOAD):
+    return min(
+        simulate_transfer_s(payload, link, streams=s, chunk_bytes=c * (1 << 20))
+        for s in STREAM_GRID for c in CHUNK_GRID_MB)
+
+
+def _drive(tuner, link, payload=PAYLOAD, jitter=0.02, max_steps=600, seed0=0):
+    cfg = tuner.config()
+    for i in range(max_steps):
+        t = simulate_transfer_s(payload, link, streams=cfg["streams"],
+                                chunk_bytes=cfg["chunk_mb"] * (1 << 20),
+                                pacing=cfg["pacing"], jitter=jitter,
+                                seed=seed0 + i)
+        new = tuner.observe(t)
+        if new is not None:
+            cfg = new
+        if tuner.converged:
+            break
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# tuner convergence
+# ---------------------------------------------------------------------------
+
+def test_tuner_converges_within_10pct_from_worst_start():
+    """From the 1-stream / payload-sized-chunk scp baseline, the hill climb
+    must land within 10% of the exhaustive-sweep optimum (acceptance)."""
+    link = WAN_LONDON_POZNAN
+    tuner = OnlineTuner(streams=1, chunk_mb=64.0, window=5, warmup=1)
+    cfg = _drive(tuner, link)
+    assert tuner.converged
+    final = simulate_transfer_s(PAYLOAD, link, streams=cfg["streams"],
+                                chunk_bytes=cfg["chunk_mb"] * (1 << 20),
+                                pacing=cfg["pacing"])
+    assert final <= 1.10 * _sweep_best(link), (cfg, final)
+
+
+def test_tuner_converges_from_oversubscribed_start():
+    """256 streams of tiny chunks pays setup overhead; the tuner must back
+    off toward the optimum, not just climb up."""
+    link = WAN_LONDON_POZNAN
+    tuner = OnlineTuner(streams=256, chunk_mb=0.0625, window=5, warmup=1)
+    cfg = _drive(tuner, link, seed0=5000)
+    final = simulate_transfer_s(PAYLOAD, link, streams=cfg["streams"],
+                                chunk_bytes=cfg["chunk_mb"] * (1 << 20),
+                                pacing=cfg["pacing"])
+    assert final <= 1.10 * _sweep_best(link), (cfg, final)
+
+
+def test_tuner_keeps_single_stream_on_local_link():
+    """On a window-free fabric more streams only add overhead: starting at
+    1 stream must stay at 1 stream (paper: 1 stream local)."""
+    tuner = OnlineTuner(streams=1, chunk_mb=8.0, window=3, warmup=0)
+    cfg = _drive(tuner, ICI, jitter=0.0)
+    assert cfg["streams"] == 1
+
+
+def test_tuner_mechanics():
+    tuner = OnlineTuner(streams=32, chunk_mb=8.0, pacing=1.0, window=2,
+                        warmup=0)
+    assert tuner.config() == {"streams": 32, "chunk_mb": 8.0, "pacing": 1.0}
+    # off-grid warm starts are kept exact (inserted as grid points), so the
+    # incumbent is the config actually running
+    t2 = OnlineTuner(streams=33, chunk_mb=7.0, pacing=0.9)
+    assert t2.config()["streams"] == 33 and t2.config()["chunk_mb"] == 7.0
+    assert t2.config()["pacing"] == 0.9
+    # no decision before a full window
+    assert tuner.observe(1.0) is None
+    first = tuner.observe(1.0)         # window complete -> first probe move
+    assert first is not None and first != {"streams": 32, "chunk_mb": 8.0,
+                                           "pacing": 1.0}
+    # every proposed config stays on the grids
+    for _ in range(200):
+        cfg = tuner.observe(1.0)
+        if tuner.converged:
+            break
+        if cfg is not None:
+            assert cfg["streams"] in STREAM_GRID
+            assert cfg["chunk_mb"] in CHUNK_GRID_MB
+    # constant cost everywhere -> nothing beats the incumbent -> revert
+    assert tuner.converged
+    assert tuner.config() == tuner.best_config() == {
+        "streams": 32, "chunk_mb": 8.0, "pacing": 1.0}
+    assert tuner.observe(1.0) is None  # converged tuner stays quiet
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_telemetry_records_and_reports():
+    tele = Telemetry()
+    tele.note_plan("p:wan", payload_bytes=1 << 20, n_chunks=16,
+                   streams_used=8, streams_configured=16,
+                   chunk_bytes=1 << 16, pacing=1.0, load_balance=1.2)
+    for i in range(4):
+        tele.record("p:wan", 0.5, step=i)    # nbytes defaults from the plan
+    s = tele.path("p:wan").summary()
+    assert s["transfers"] == 4
+    assert s["total_bytes"] == 4 << 20
+    assert s["stream_utilization"] == 0.5
+    assert abs(s["achieved_GBps"] - (4 << 20) / 2.0 / 1e9) < 1e-9
+    assert "p:wan" in tele.report()
+    assert "p:wan" in tele.format_report()
+    with tele.timed("p:other", nbytes=100):
+        pass
+    assert tele.path("p:other").transfers == 1
+    tele.reset("p:other")
+    assert "p:other" not in tele.report()
+
+
+def test_telemetry_window_is_bounded():
+    tele = Telemetry()
+    pt = tele.path("k")
+    pt.window = 8
+    for i in range(100):
+        pt.record(0.001, nbytes=1, step=i)
+    assert len(pt.samples) == 8
+    assert pt.transfers == 100 and pt.total_bytes == 100
+
+
+def test_plan_recorded_at_trace_time_by_streamed_psum():
+    """Plans flow into the global registry even from abstract tracing."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import CommConfig
+    from repro.core.collectives import streamed_psum
+
+    get_telemetry().reset("traced:interpod")
+    path = WidePath(axis="pod", comm=CommConfig(streams=4, chunk_mb=0.0001),
+                    name="traced")
+    mesh = jax.make_mesh((1, 1), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    f = jax.shard_map(lambda t: streamed_psum(t, path, dims={"g": 0}),
+                      mesh=mesh, in_specs=(P(),), out_specs=P(),
+                      axis_names={"pod", "data"}, check_vma=False)
+    with jax.set_mesh(mesh):
+        jax.eval_shape(f, {"g": jnp.zeros((4096, 32), jnp.float32)})
+    plan = get_telemetry().path("traced:interpod").plan
+    assert plan is not None
+    assert plan.payload_bytes == 4096 * 32 * 4
+    assert plan.n_chunks > 1        # 512 KiB over the 64 KiB chunk floor
+    assert plan.streams_used <= plan.streams_configured == 4
+
+
+# ---------------------------------------------------------------------------
+# MPW facade: setAutoTuning / Observe / PathStats / Report
+# ---------------------------------------------------------------------------
+
+def test_mpw_online_autotuning_loop():
+    link = WAN_LONDON_POZNAN
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(axis="pod", nstreams=1, link=link)
+    mpw.setChunkSize(pid, 64 << 20)
+    mpw.setAutoTuning(pid, True, online=True, window=5)
+    retuned = 0
+    for i in range(600):
+        p = mpw.path(pid)
+        t = simulate_transfer_s(PAYLOAD, link, streams=p.streams,
+                                chunk_bytes=p.chunk_bytes,
+                                pacing=p.comm.pacing, jitter=0.02,
+                                seed=9000 + i)
+        retuned += mpw.Observe(pid, t, nbytes=PAYLOAD)
+        if mpw.paths[pid].tuner.converged:
+            break
+    assert retuned > 0, "online tuner never re-tuned the path"
+    p = mpw.path(pid)
+    final = simulate_transfer_s(PAYLOAD, link, streams=p.streams,
+                                chunk_bytes=p.chunk_bytes,
+                                pacing=p.comm.pacing)
+    assert final <= 1.10 * _sweep_best(link), (p.streams, p.comm.chunk_mb)
+
+    stats = mpw.PathStats(pid)
+    assert stats["transfers"] > 0 and stats["total_bytes"] > 0
+    assert stats["retunes"], "retune history must be recorded"
+    rep = mpw.Report()
+    assert mpw.path(pid).key in rep
+    assert isinstance(mpw.Report(formatted=True), str)
+
+    # disabling drops the controller but keeps the tuned knobs
+    streams_before = p.streams
+    mpw.setAutoTuning(pid, False)
+    assert mpw.paths[pid].tuner is None
+    assert mpw.path(pid).streams == streams_before
+    assert mpw.Observe(pid, 0.1) is False
+    mpw.Finalize()
+
+
+def test_mpw_warm_start_still_works():
+    """payload_bytes path: model-based warm start seeds the online tuner."""
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(axis="pod", nstreams=1, link=WAN_LONDON_POZNAN)
+    mpw.setAutoTuning(pid, True, payload_bytes=256 << 20)
+    assert mpw.path(pid).streams >= 32     # paper: >=32 streams on WANs
+    assert mpw.paths[pid].tuner is not None
+    # the controller's incumbent is exactly the warm-started, running config
+    assert mpw.paths[pid].tuner.config()["streams"] == mpw.path(pid).streams
+    assert mpw.paths[pid].tuner.config()["chunk_mb"] == mpw.path(pid).comm.chunk_mb
+
+
+_TRAIN_AUTOTUNE = r"""
+import json
+import jax
+from repro.configs import get_config, smoke_config, RunConfig, ShapeConfig, CommConfig, TrainConfig
+from repro.runtime import Trainer
+from repro.data import DataConfig, make_pipeline
+from repro.core import MPW
+from repro.core.telemetry import get_telemetry
+
+cfg = smoke_config(get_config("qwen1.5-0.5b"))
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+rc = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+               comm=CommConfig(mode="hierarchical", streams=2, chunk_mb=0.25),
+               train=TrainConfig(zero1=True, warmup_steps=2, total_steps=50, lr=3e-3))
+data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=8), prefetch=0)
+tr = Trainer(rc, mesh, autotune_every=2)
+tr.init_or_restore()
+hist = tr.run(iter(data), 8, log_every=0, log=lambda s: None)
+stats = get_telemetry().path("train:interpod").summary()
+rep = MPW.Init().Report()
+print("RESULT:" + json.dumps({
+    "steps": len(hist),
+    "transfers": stats["transfers"],
+    "plan_bytes": stats["plan"]["payload_bytes"],
+    "n_retunes": len(stats["retunes"]),
+    "report_keys": sorted(rep),
+    "losses_finite": all(h["loss"] == h["loss"] for h in hist),
+}))
+"""
+
+
+def test_trainer_online_autotune_end_to_end(multidev):
+    """The full loop: measured step times drive the controller, the trainer
+    swaps executables, telemetry + MPW.Report stay populated (acceptance)."""
+    res = multidev(_TRAIN_AUTOTUNE)
+    assert res["steps"] == 8 and res["losses_finite"]
+    # compile-spike steps (one per newly built executable) are excluded
+    # from telemetry, so transfers <= steps
+    assert 1 <= res["transfers"] <= 8
+    assert res["plan_bytes"] > 0
+    assert res["n_retunes"] >= 1, "controller never proposed a re-tune"
+    assert "train:interpod" in res["report_keys"]
+
+
+def test_report_populated_by_train_step_build():
+    """Acceptance: per-path stats are non-empty after a training run.
+
+    Building the train step records the cross-pod gradient plan; executing
+    steps records timings.  Exercised here via the cheapest real entry point
+    (build on a single-device mesh) so the test runs without multi-pod
+    devices; the full loop is covered by benchmarks/fig1 and test_runtime.
+    """
+    import jax
+
+    from repro.configs.base import RunConfig, get_config, smoke_config
+    from repro.configs.base import SHAPES
+    from repro.runtime.step import build_train_step
+
+    get_telemetry().reset("train:interpod")
+    rc = RunConfig(model=smoke_config(get_config("qwen1.5-0.5b")),
+                   shape=SHAPES["train_4k"])
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    build_train_step(rc, mesh)
+    stats = get_telemetry().path("train:interpod").summary()
+    assert stats["plan"]["payload_bytes"] > 0
+    assert stats["plan"]["streams_configured"] >= 1
+    rep = MPW.Init().Report()
+    assert "train:interpod" in rep and rep["train:interpod"]["plan"]

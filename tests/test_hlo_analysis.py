@@ -32,7 +32,7 @@ def test_scan_multiplies_body():
                       jax.ShapeDtypeStruct((B, D), jnp.float32))
     assert flops == pytest.approx(2 * B * D * D * L, rel=1e-6)
     # and XLA's own analysis undercounts (documents why the analyzer exists)
-    assert c.cost_analysis()["flops"] < flops
+    assert H.xla_cost(c)["flops"] < flops
 
 
 def test_grad_of_scan():

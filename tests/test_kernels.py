@@ -8,12 +8,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("kernels", max_examples=20, deadline=None)
+    settings.load_profile("kernels")
+except ImportError:  # property tests skip; deterministic tests still run
+    from conftest import given, st  # noqa: F401
 
 from repro.kernels import ops, ref
-
-settings.register_profile("kernels", max_examples=20, deadline=None)
-settings.load_profile("kernels")
 
 
 def _rand(key, shape, dtype):

@@ -1,0 +1,114 @@
+"""Chunk-planning edge cases: zero-dim leaves, degenerate shapes, leaves
+smaller than a chunk, uneven round-robin balance, and plan summaries."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streams import (assign_streams, leaf_bytes, plan_chunks,
+                                plan_summary, slice_chunk, stitch_leaf)
+
+
+def test_scalar_leaf_single_chunk():
+    """A zero-dim leaf (loss scale, step counter) is one chunk, unsliced."""
+    x = jnp.float32(3.0)
+    chunks = plan_chunks([x], [None], chunk_bytes=1 << 20)
+    assert len(chunks) == 1 and chunks[0].nbytes == 4
+    assert slice_chunk(x, chunks[0]) is x
+    assert stitch_leaf(x, [(chunks[0], x)]) is x
+
+
+def test_zero_size_leaf():
+    """A (0,)-shaped leaf plans to one empty chunk and round-trips."""
+    x = jnp.zeros((0,), jnp.float32)
+    chunks = plan_chunks([x], [0], chunk_bytes=64)
+    assert len(chunks) == 1 and chunks[0].nbytes == 0
+    out = stitch_leaf(x, [(chunks[0], slice_chunk(x, chunks[0]))])
+    assert out.shape == (0,)
+
+
+def test_leaf_smaller_than_chunk_is_not_split():
+    x = jnp.zeros((8, 4), jnp.float32)      # 128 B
+    chunks = plan_chunks([x], [0], chunk_bytes=1 << 20)
+    assert len(chunks) == 1
+    assert slice_chunk(x, chunks[0]).shape == x.shape
+
+
+def test_dim_of_size_one_is_not_split():
+    """shape[dim] == 1 cannot be cut even when the leaf exceeds chunk_bytes."""
+    x = jnp.zeros((1, 4096), jnp.float32)   # 16 KiB > chunk_bytes
+    chunks = plan_chunks([x], [0], chunk_bytes=1024)
+    assert len(chunks) == 1 and chunks[0].nbytes == leaf_bytes(x)
+
+
+def test_row_larger_than_chunk_still_progresses():
+    """bytes_per_row > chunk_bytes: chunks degrade to one row each, and the
+    plan still tiles the dim exactly."""
+    x = jnp.zeros((5, 1024), jnp.float32)   # 4 KiB rows, 1 KiB chunks
+    chunks = plan_chunks([x], [0], chunk_bytes=1024)
+    assert len(chunks) == 5
+    spans = sorted((c.start, c.start + c.size) for c in chunks)
+    assert spans[0][0] == 0 and spans[-1][1] == 5
+    assert all(b == c for (_, b), (c, _) in zip(spans, spans[1:]))
+
+
+def test_uneven_round_robin_balance():
+    """7 equal chunks on 4 streams: no stream gets more than 2; all chunks
+    appear exactly once."""
+    x = jnp.zeros((7, 256), jnp.float32)
+    chunks = plan_chunks([x], [0], chunk_bytes=1024)
+    assert len(chunks) == 7
+    buckets = assign_streams(chunks, 4)
+    assert len(buckets) == 4
+    sizes = sorted(len(b) for b in buckets)
+    assert sizes == [1, 2, 2, 2]
+    seen = sorted((c.start for b in buckets for c in b))
+    assert seen == [c.start for c in sorted(chunks, key=lambda c: c.start)]
+
+
+def test_more_streams_than_chunks_collapses():
+    """Streams are capped at the chunk count (paper: a payload cut into K
+    pieces cannot feed more than K channels)."""
+    x = jnp.zeros((2, 256), jnp.float32)
+    chunks = plan_chunks([x], [0], chunk_bytes=1024)
+    buckets = assign_streams(chunks, 256)
+    assert len(buckets) == len(chunks) == 2
+
+
+def test_mixed_tree_balance_by_bytes():
+    """Descending-size round robin keeps max load within 2x of the mean even
+    with wildly uneven leaves."""
+    leaves = [jnp.zeros((64, 64), jnp.float32),   # 16 KiB
+              jnp.zeros((3,), jnp.float32),       # 12 B
+              jnp.zeros((), jnp.float32)]         # 4 B
+    chunks = plan_chunks(leaves, [0, 0, None], chunk_bytes=2048)
+    buckets = assign_streams(chunks, 4)
+    loads = [sum(c.nbytes for c in b) for b in buckets]
+    assert max(loads) <= 2 * (sum(loads) / len(loads)) + 2048
+
+
+def test_plan_summary_fields():
+    leaves = [jnp.zeros((64, 64), jnp.float32), jnp.zeros((), jnp.float32)]
+    chunks = plan_chunks(leaves, [0, None], chunk_bytes=2048)
+    buckets = assign_streams(chunks, 4)
+    s = plan_summary(chunks, buckets, streams_configured=4, chunk_bytes=2048,
+                     pacing=0.5)
+    assert s["payload_bytes"] == 64 * 64 * 4 + 4
+    assert s["n_chunks"] == len(chunks)
+    assert s["streams_used"] == len(buckets) <= 4
+    assert s["chunk_bytes"] == 2048 and s["pacing"] == 0.5
+    assert s["load_balance"] >= 1.0
+
+
+def test_plan_summary_on_abstract_leaves():
+    """The runtime records plans at build time from ShapeDtypeStructs —
+    planning must not require concrete arrays."""
+    import jax
+
+    leaves = [jax.ShapeDtypeStruct((128, 32), jnp.float32),
+              jax.ShapeDtypeStruct((), jnp.float32)]
+    chunks = plan_chunks(leaves, [0, None], chunk_bytes=4096)
+    buckets = assign_streams(chunks, 8)
+    s = plan_summary(chunks, buckets, 8, 4096)
+    assert s["payload_bytes"] == 128 * 32 * 4 + 4
+    assert s["n_chunks"] == int(np.ceil(128 * 32 * 4 / 4096)) + 1

@@ -9,15 +9,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("sub", max_examples=15, deadline=None)
+    settings.load_profile("sub")
+except ImportError:  # property tests skip; deterministic tests still run
+    from conftest import given, st  # noqa: F401
 
 from repro.checkpoint import CheckpointManager, DataGather, restore, save, sync_once
 from repro.configs.base import TrainConfig
 from repro.data import DataConfig, Prefetcher, SyntheticLM, make_pipeline
 from repro.optim import adamw_update, init_opt_state, lr_at
-
-settings.register_profile("sub", max_examples=15, deadline=None)
-settings.load_profile("sub")
 
 
 # ---------------------------------------------------------------------------
