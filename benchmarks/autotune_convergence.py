@@ -27,7 +27,7 @@ PAYLOAD = 64 << 20          # one gradient-sync payload
 LINK = WAN_LONDON_POZNAN
 JITTER = 0.05               # +-2.5% measurement noise
 WINDOW = 5                  # samples per tuning decision
-MAX_STEPS = 600
+MAX_STEPS = 600             # host-side simulator: cheap even in --dry mode
 
 
 def _measure(cfg: dict, seed: int, jitter: float = JITTER) -> float:

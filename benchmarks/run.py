@@ -1,8 +1,14 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report.  ``PYTHONPATH=src python -m benchmarks.run``"""
+report.  ``PYTHONPATH=src python -m benchmarks.run``
+
+``--dry`` runs every section in tiny/smoke mode (exported to sections as
+WIDEJAX_BENCH_DRY=1: shrunk payloads and iteration counts) — the CI smoke
+job uses it to catch benchmark drift at PR time without WAN-scale runtimes.
+"""
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -11,19 +17,27 @@ import traceback
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig1,bloodflow,streams,autotune,roofline")
+                    help="comma list: table1,fig1,bloodflow,streams,autotune,"
+                         "multihop,roofline")
+    ap.add_argument("--dry", action="store_true",
+                    help="tiny payloads / few iterations (CI smoke mode)")
     args = ap.parse_args()
+    if args.dry:
+        # sections and their multidev subprocesses read this
+        os.environ["WIDEJAX_BENCH_DRY"] = "1"
     sections = {
         "table1": ("benchmarks.table1_throughput", "Table 1 WAN throughput"),
         "fig1": ("benchmarks.fig1_steptime", "Fig 1 distributed overhead"),
         "bloodflow": ("benchmarks.overlap_bloodflow", "bloodflow latency hiding"),
         "streams": ("benchmarks.streams_sweep", "streams sweep"),
         "autotune": ("benchmarks.autotune_convergence", "online autotune convergence"),
+        "multihop": ("benchmarks.multihop_relay", "multi-hop relay & forwarder routing"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)
     failures = 0
-    print("# WideJAX benchmarks (MPWide reproduction)\n")
+    print("# WideJAX benchmarks (MPWide reproduction)"
+          + (" — DRY/smoke mode" if args.dry else "") + "\n")
     for name in chosen:
         mod_name, desc = sections[name]
         t0 = time.time()

@@ -12,9 +12,13 @@ Reproduction on a CPU-only container has two halves:
 """
 from __future__ import annotations
 
+import os
+
 from benchmarks.common import TABLE1_LINKS, fmt_mbs, run_multidev, stream_throughput
 
 PAYLOAD_MB = 64   # paper: "we exchanged 64MB of data"
+if os.environ.get("WIDEJAX_BENCH_DRY"):
+    PAYLOAD_MB = 2   # smoke mode: validate op structure, not bandwidth
 
 
 def modeled_table() -> str:
@@ -74,7 +78,7 @@ print("RESULT:" + json.dumps(out))
 
 def measured_table(nbytes: int = PAYLOAD_MB << 20) -> str:
     res = run_multidev(_MEASURE_SNIPPET.format(nbytes=nbytes))
-    rows = ["| engine | wall time (64MB allreduce, 8 fake CPU devs) |",
+    rows = [f"| engine | wall time ({PAYLOAD_MB}MB allreduce, 8 fake CPU devs) |",
             "|---|---|"]
     for k, v in res.items():
         rows.append(f"| {k} | {v*1e3:.1f} ms |")

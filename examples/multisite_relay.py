@@ -1,0 +1,70 @@
+"""Multi-site relay (paper: CosmoGrid across 4 supercomputers): sites
+without direct connectivity exchange state through the Forwarder, and the
+gradient-style all-reduce goes site-hierarchical so only gateway pods cross
+the slow WAN hop.
+
+Four single-pod sites form the CosmoGrid star (Tokyo and Espoo only reach
+each other via Amsterdam).  Each outer step:
+  1. every site advances a local state,
+  2. Tokyo ships its boundary to Espoo through the 2-hop Forwarder route
+     (store-and-forward via Amsterdam, per-hop chunking/streams),
+  3. a site-aware AllReduce folds every site's scalar diagnostics.
+
+Run:  PYTHONPATH=src python examples/multisite_relay.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import MPW, WidePath, cosmogrid_topology, get_telemetry, streamed_psum
+from repro.configs.base import CommConfig
+
+STEPS = 8
+N = 256
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    topo = cosmogrid_topology()          # 4 sites, no tokyo<->espoo link
+    mpw = MPW.Init()
+    fwd = mpw.CreateForwarder(topo, "tokyo", "espoo")
+    print("forwarder route:", " -> ".join(h["name"] for h in mpw.Route(fwd)))
+    groups = topo.pod_groups()
+    ar_path = WidePath(axis="pod", name="diag",
+                       comm=CommConfig(streams=2, chunk_mb=0.25))
+
+    def coupled(u0):
+        def step(carry, _):
+            u, boundary = carry
+            u = u.at[0].add(0.25 * boundary)             # fold the relay in
+            u = u + 0.1 * (jnp.roll(u, 1) - 2 * u + jnp.roll(u, -1))
+            got = mpw.Forward(fwd, {"b": u[-1]})          # 2-hop relay
+            diag = streamed_psum({"m": jnp.mean(u)}, ar_path,
+                                 site_groups=groups)      # site-aware reduce
+            return (u, got["b"]), diag["m"]
+        (u, _), means = jax.lax.scan(step, (u0, jnp.float32(0.0)),
+                                     None, length=STEPS)
+        mpw.Barrier()
+        return u, means
+
+    f = jax.jit(jax.shard_map(coupled, mesh=mesh, in_specs=(P(),),
+                              out_specs=(P("pod"), P("pod")),
+                              axis_names={"pod"}, check_vma=False))
+    u0 = jnp.sin(jnp.linspace(0, 6.28, N))
+    with jax.set_mesh(mesh):
+        u, means = f(u0)
+    assert jnp.isfinite(u).all()
+    print(f"{STEPS} coupled steps across 4 sites; global mean trajectory:",
+          [f"{float(x):.4f}" for x in means.reshape(4, STEPS)[0][::2]])
+    print("\nper-hop stats (MPW.Report):\n")
+    print(mpw.Report(formatted=True))
+    mpw.Finalize()
+    print("\nmultisite_relay OK (2-hop Forwarder + site-hierarchical psum)")
+
+
+if __name__ == "__main__":
+    main()

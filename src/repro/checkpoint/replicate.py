@@ -15,7 +15,12 @@ import time
 
 
 def sync_once(src: str, dst: str) -> int:
-    """One-way sync; returns number of files copied. Atomic per file."""
+    """One-way sync; returns number of files copied. Atomic per file.
+
+    Runs concurrently with the writer: a source file may vanish between the
+    walk and the stat/copy (checkpoint GC deleting an old step), which must
+    not crash the pass — the next prune removes its mirror copy.
+    """
     if not os.path.isdir(src):
         return 0
     os.makedirs(dst, exist_ok=True)
@@ -27,22 +32,34 @@ def sync_once(src: str, dst: str) -> int:
         for fn in files:
             s = os.path.join(root, fn)
             t = os.path.join(troot, fn)
-            if (not os.path.exists(t)
-                    or os.path.getmtime(s) > os.path.getmtime(t)
-                    or os.path.getsize(s) != os.path.getsize(t)):
-                tmp = t + ".tmp"
-                shutil.copy2(s, tmp)
-                os.replace(tmp, t)
-                copied += 1
-    # prune deleted entries (keep mirror exact)
-    for root, _, files in os.walk(dst):
+            try:
+                if (not os.path.exists(t)
+                        or os.path.getmtime(s) > os.path.getmtime(t)
+                        or os.path.getsize(s) != os.path.getsize(t)):
+                    tmp = t + ".tmp"
+                    shutil.copy2(s, tmp)
+                    os.replace(tmp, t)
+                    copied += 1
+            except FileNotFoundError:
+                continue   # deleted from src mid-walk
+    # prune deleted entries (keep mirror exact); bottom-up so directories
+    # emptied by file pruning can be removed in the same pass
+    for root, dirs, files in os.walk(dst, topdown=False):
         rel = os.path.relpath(root, dst)
         sroot = os.path.join(src, rel) if rel != "." else src
         for fn in files:
             if fn.endswith(".tmp"):
                 continue
             if not os.path.exists(os.path.join(sroot, fn)):
-                os.remove(os.path.join(root, fn))
+                try:
+                    os.remove(os.path.join(root, fn))
+                except FileNotFoundError:
+                    pass
+        if root != dst and not os.path.isdir(sroot):
+            try:
+                os.rmdir(root)          # only succeeds once empty
+            except OSError:
+                pass                    # still holds live entries
     return copied
 
 

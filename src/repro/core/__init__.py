@@ -1,8 +1,9 @@
 """MPWide core: paths, streamed collectives, autotuner, telemetry, relay,
-MPW_* API."""
+multi-site topology/Forwarder, MPW_* API."""
 from repro.core.api import MPW  # noqa: F401
 from repro.core.autotune import (  # noqa: F401
     OnlineTuner,
+    RouteTuner,
     Tuning,
     autotune_path,
     simulate_transfer_s,
@@ -12,10 +13,34 @@ from repro.core.collectives import (  # noqa: F401
     flat_allreduce,
     gateway_allreduce,
     hierarchical_allreduce,
+    site_allreduce,
     streamed_psum,
     wide_allreduce,
 )
-from repro.core.cycle import barrier, cycle, pod_shift, relay, sendrecv  # noqa: F401
+from repro.core.cycle import (  # noqa: F401
+    barrier,
+    cycle,
+    forward,
+    pod_shift,
+    relay,
+    sendrecv,
+)
 from repro.core.overlap import accum_grads  # noqa: F401
-from repro.core.path import ICI, INTERPOD, LinkSpec, WidePath, local_path  # noqa: F401
+from repro.core.path import (  # noqa: F401
+    ICI,
+    INTERPOD,
+    Hop,
+    LinkSpec,
+    WidePath,
+    local_path,
+)
 from repro.core.telemetry import PathTelemetry, Telemetry, get_telemetry  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    LAN,
+    Forwarder,
+    LinkProfile,
+    Route,
+    Site,
+    Topology,
+    cosmogrid_topology,
+)

@@ -18,7 +18,7 @@ Differences from the C++ API, by necessity of the platform:
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Optional
 
 import jax
@@ -26,16 +26,17 @@ import jax.numpy as jnp
 
 from repro.configs.base import CommConfig
 from repro.core import cycle as cy
-from repro.core.autotune import OnlineTuner, autotune_path
+from repro.core.autotune import OnlineTuner, RouteTuner, autotune_path
 from repro.core.collectives import streamed_psum
-from repro.core.path import INTERPOD, WidePath
+from repro.core.path import INTERPOD, Hop, WidePath
 from repro.core.telemetry import get_telemetry
 
 
 @dataclass
 class _PathState:
     path: WidePath
-    tuner: Optional[OnlineTuner] = None
+    tuner: Optional[OnlineTuner] = None        # single-link paths
+    route_tuner: Optional[RouteTuner] = None   # multi-hop paths (per hop)
 
 
 # process-wide path ids: telemetry keys ("mpw{pid}:{link}") must stay unique
@@ -66,6 +67,55 @@ class MPW:
             WidePath(axis=axis, comm=comm, link=link, name=f"mpw{pid}"))
         return pid
 
+    def CreatePathVariadic(self, axis: str = "pod",
+                           streams_per_hop=(32,), links=None,
+                           comm: Optional[CommConfig] = None) -> int:
+        """MPW_CreatePathVariadicStreams: a path whose legs each get their
+        own stream count (paper: per-leg tuning of a Forwarder route).
+
+        `links` is an optional per-hop sequence of LinkSpecs (or topology
+        LinkProfiles via `.spec`); hops default to consecutive +1 ring
+        shifts.  A single-entry `streams_per_hop` degrades to CreatePath.
+        """
+        comm = comm or CommConfig()
+        links = list(links) if links is not None else [INTERPOD] * len(streams_per_hop)
+        if len(links) != len(streams_per_hop):
+            raise ValueError("streams_per_hop and links must align per hop")
+        pid = next(_PATH_IDS)
+        hops = tuple(
+            Hop(name=f"hop{i}-{lk.name}", link=lk,
+                comm=replace(comm, streams=int(s)), shift=1)
+            for i, (s, lk) in enumerate(zip(streams_per_hop, links)))
+        base = WidePath(axis=axis, comm=comm, name=f"mpw{pid}")
+        self.paths[pid] = _PathState(base.with_hops(hops))
+        return pid
+
+    def CreateForwarder(self, topo, src: str, dst: str, *,
+                        metric: str = "latency",
+                        comm: Optional[CommConfig] = None) -> int:
+        """Set up the paper's Forwarder: plan a route src -> dst through the
+        topology (relaying across intermediate sites when there is no direct
+        link) and register it as a multi-hop path.  `Relay`/`Forward` then
+        store-and-forward along it; `PathStats` reports every hop."""
+        from repro.core.topology import Forwarder
+        pid = next(_PATH_IDS)
+        fwd = Forwarder(topo, src, dst, metric=metric, comm=comm,
+                        name=f"mpw{pid}-{src}-{dst}")
+        self.paths[pid] = _PathState(fwd.path)
+        return pid
+
+    def Forward(self, pid: int, tree, dims=None, reverse: bool = False):
+        """Relay a payload along the path's route, store-and-forward (the
+        Forwarder data plane; single-link paths degrade to one shift)."""
+        return cy.forward(tree, self.path(pid), dims=dims, reverse=reverse)
+
+    def Route(self, pid: int) -> list:
+        """Hop descriptions of a path's route (name, link, shift, knobs)."""
+        return [{"hop": i, "name": h.name, "link": h.link.name,
+                 "shift": h.shift, "streams": h.streams,
+                 "chunk_mb": h.comm.chunk_mb, "pacing": h.comm.pacing}
+                for i, h in enumerate(self.path(pid).route)]
+
     def DestroyPath(self, pid: int) -> None:
         del self.paths[pid]
 
@@ -92,31 +142,66 @@ class MPW:
         (alpha-beta optimum for that payload).  With `online` (beyond the C
         API) an :class:`OnlineTuner` is attached: feed measured seconds via
         :meth:`Observe` and the path re-tunes itself every `window` samples.
+        Multi-hop paths get a :class:`RouteTuner` — one controller per hop,
+        because the legs of a Forwarder route have different optima (the
+        paper: >=32 streams WAN, 1 LAN on the same route).
         """
         st = self.paths[pid]
         p = st.path.with_(autotune=enabled)
         if enabled and payload_bytes:
             p = autotune_path(p, payload_bytes)
         st.path = p
+        st.tuner = st.route_tuner = None
         if enabled and online:
-            st.tuner = OnlineTuner(streams=p.streams,
-                                   chunk_mb=p.comm.chunk_mb,
-                                   pacing=p.comm.pacing, window=window)
-        else:
-            st.tuner = None
+            if p.hops:
+                st.route_tuner = RouteTuner(p, window=window)
+            else:
+                st.tuner = OnlineTuner(streams=p.streams,
+                                       chunk_mb=p.comm.chunk_mb,
+                                       pacing=p.comm.pacing, window=window)
 
     def Observe(self, pid: int, seconds: float,
-                nbytes: Optional[int] = None) -> bool:
+                nbytes: Optional[int] = None,
+                hop: Optional[int] = None) -> bool:
         """Feed one measured transfer/step time for a path (beyond the C
         API; the paper's library measures inside its own send loop — here
         transfers execute inside jitted steps, so the host reports times).
 
         Records the sample in telemetry and, when autotuning is on, advances
-        the online controller.  Returns True when the path was re-tuned —
-        callers holding compiled executables should rebuild on True.
+        the online controller.  On a multi-hop path, `hop` attributes the
+        sample to one leg; without it the end-to-end time is split across
+        hops by modeled share and every hop's controller advances.  Returns
+        True when any hop was re-tuned — callers holding compiled
+        executables should rebuild on True.
         """
         st = self.paths[pid]
-        get_telemetry().record(st.path.key, seconds, nbytes=nbytes)
+        tel = get_telemetry()
+        if hop is not None:
+            if not 0 <= hop < st.path.n_hops:
+                raise ValueError(f"hop {hop} out of range for a "
+                                 f"{st.path.n_hops}-hop path")
+            if not st.path.hops:
+                hop = None   # single-link: the path IS the hop
+        if hop is not None:
+            tel.record(st.path.hop_key(hop), seconds, nbytes=nbytes)
+            if st.route_tuner is None:
+                return False
+            cfg = st.route_tuner.observe(hop, seconds)
+            if cfg is None:
+                return False
+            st.path = st.path.with_hop(hop, **cfg)
+            tel.path(st.path.hop_key(hop)).note_retune(None, cfg)
+            return True
+        tel.record(st.path.key, seconds, nbytes=nbytes)
+        if st.route_tuner is not None:
+            plan = tel.path(st.path.key).plan
+            payload = nbytes if nbytes is not None else (
+                plan.payload_bytes if plan else 0)
+            retunes = st.route_tuner.observe_total(seconds, payload)
+            for i, cfg in retunes.items():
+                st.path = st.path.with_hop(i, **cfg)
+                tel.path(st.path.hop_key(i)).note_retune(None, cfg)
+            return bool(retunes)
         if st.tuner is None:
             return False
         cfg = st.tuner.observe(seconds)
@@ -128,8 +213,14 @@ class MPW:
 
     # -- telemetry (beyond the C API; the paper's mpwtest diagnostics) -------
     def PathStats(self, pid: int) -> dict:
-        """Per-path stats: plan shape, transfer counts, achieved GB/s."""
-        return get_telemetry().path(self.paths[pid].path.key).summary()
+        """Per-path stats: plan shape, transfer counts, achieved GB/s.
+        Multi-hop paths add a `hops` list with one summary per leg."""
+        p = self.paths[pid].path
+        out = get_telemetry().path(p.key).summary()
+        if p.hops:
+            out["hops"] = [get_telemetry().path(k).summary()
+                           for k in p.hop_keys()]
+        return out
 
     def Report(self, formatted: bool = False):
         """All per-path stats recorded in this process (facade paths and the
@@ -138,16 +229,16 @@ class MPW:
         return t.format_report() if formatted else t.report()
 
     # -- data movement ------------------------------------------------------
-    def Send(self, pid: int, tree, shift: int = 1):
+    def Send(self, pid: int, tree, shift: int = 1, dims=None):
         """Send to the ring neighbour; returns what the neighbour sent us
         (SPMD sends are symmetric — this is MPW_SendRecv's send half)."""
-        return cy.pod_shift(tree, self.path(pid), shift)
+        return cy.pod_shift(tree, self.path(pid), shift, dims=dims)
 
-    def Recv(self, pid: int, tree, shift: int = 1):
-        return cy.pod_shift(tree, self.path(pid), -shift)
+    def Recv(self, pid: int, tree, shift: int = 1, dims=None):
+        return cy.pod_shift(tree, self.path(pid), -shift, dims=dims)
 
-    def SendRecv(self, pid: int, tree, shift: int = 1):
-        return cy.sendrecv(tree, self.path(pid), shift)
+    def SendRecv(self, pid: int, tree, shift: int = 1, dims=None):
+        return cy.sendrecv(tree, self.path(pid), shift, dims=dims)
 
     def DSendRecv(self, pid: int, tree, length: jax.Array, max_len: int,
                   shift: int = 1):
@@ -172,16 +263,19 @@ class MPW:
         out, _ = jax.lax.optimization_barrier((value, token))
         return out
 
-    def AllReduce(self, pid: int, tree, dims=None):
+    def AllReduce(self, pid: int, tree, dims=None, site_groups=None):
         """Not in the C API (MPWide users hand-roll it); provided because
-        gradient sync is the dominant use in this framework."""
-        return streamed_psum(tree, self.path(pid), dims=dims)
+        gradient sync is the dominant use in this framework.  `site_groups`
+        (Topology.pod_groups) reduces intra-site before the slow hop."""
+        return streamed_psum(tree, self.path(pid), dims=dims,
+                             site_groups=site_groups)
 
-    def Cycle(self, recv_pid: int, send_pid: int, tree):
-        return cy.cycle(self.path(recv_pid), self.path(send_pid), tree)
+    def Cycle(self, recv_pid: int, send_pid: int, tree, dims=None):
+        return cy.cycle(self.path(recv_pid), self.path(send_pid), tree,
+                        dims=dims)
 
-    def Relay(self, pid: int, tree, hops: int = 1):
-        return cy.relay(tree, self.path(pid), hops)
+    def Relay(self, pid: int, tree, hops: int = 1, dims=None):
+        return cy.relay(tree, self.path(pid), hops, dims=dims)
 
     def Barrier(self):
         return cy.barrier()

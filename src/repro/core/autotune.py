@@ -235,6 +235,61 @@ class OnlineTuner:
 
 
 # ---------------------------------------------------------------------------
+# per-hop tuning: one controller per leg of a multi-hop route
+# ---------------------------------------------------------------------------
+
+def hop_shares(route, nbytes: float = 0.0) -> list:
+    """Each hop's fraction of a store-and-forward relay's wall time, from
+    the alpha-beta model (hop times add, so shares are alpha + bytes/bw,
+    normalized).  The one split used both to attribute end-to-end
+    measurements to hops (telemetry) and to feed per-hop controllers."""
+    shares = [h.link.transfer_s(max(0.0, float(nbytes))) for h in route]
+    total = sum(shares) or 1.0
+    return [s / total for s in shares]
+
+class RouteTuner:
+    """One :class:`OnlineTuner` per hop of a multi-hop path.
+
+    The paper tunes every path leg separately (>=32 streams on the WAN leg,
+    1 on the LAN leg of the same Forwarder route); a single controller over
+    the whole route would conflate the legs' very different optima.  Feed
+    per-hop wall seconds via :meth:`observe`; when only an end-to-end relay
+    time is measurable, :meth:`observe_total` splits it across hops by each
+    hop's modeled share (store-and-forward: hop times add, so the split is
+    proportional to alpha + bytes/bw per hop).
+    """
+
+    def __init__(self, path, *, window: int = 5, warmup: int = 1) -> None:
+        self.route = path.route
+        self.tuners = [OnlineTuner(streams=h.streams,
+                                   chunk_mb=h.comm.chunk_mb,
+                                   pacing=h.comm.pacing,
+                                   window=window, warmup=warmup)
+                       for h in self.route]
+
+    @property
+    def converged(self) -> bool:
+        return all(t.converged for t in self.tuners)
+
+    def observe(self, hop: int, seconds: float) -> Optional[dict]:
+        """One measured sample for hop `hop`; returns knobs for that hop or
+        None (exactly :meth:`OnlineTuner.observe` semantics)."""
+        return self.tuners[hop].observe(seconds)
+
+    def observe_total(self, seconds: float, nbytes: float = 0.0) -> dict:
+        """Split an end-to-end relay time across hops by modeled share and
+        feed every hop's controller.  Returns {hop index: new knobs} for the
+        hops that want a config change (empty dict: keep going)."""
+        shares = hop_shares(self.route, nbytes)
+        out: dict[int, dict] = {}
+        for i, t in enumerate(self.tuners):
+            cfg = t.observe(seconds * shares[i])
+            if cfg is not None:
+                out[i] = cfg
+        return out
+
+
+# ---------------------------------------------------------------------------
 # synthetic link: a measurement generator for convergence tests/benchmarks
 # ---------------------------------------------------------------------------
 

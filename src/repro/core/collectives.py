@@ -17,7 +17,7 @@ Modes (CommConfig.mode):
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,29 +43,37 @@ def _psum_one(x: jax.Array, dim: int, axis: str, compress: str) -> jax.Array:
     return jax.lax.psum(x, axis)
 
 
-def streamed_psum(tree, path: WidePath, dims=None):
+def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
+                  tel_key=None):
     """Chunked, streamed, paced psum of a pytree over path.axis.
 
     This is MPW_Send/Recv semantics for an all-reduce payload: the payload is
     split into chunks (MPW_setChunkSize), chunks are round-robined over
     `streams` independent channels, chunks within a channel are ordered, and
     pacing serializes channel groups (MPW_setPacingRate).
+
+    With `site_groups` (a partition of the pod-axis indices into sites, from
+    :meth:`Topology.pod_groups`) the reduction goes hierarchical: reduce
+    intra-site over the fast links first, then only one gateway pod per site
+    carries the site-sum across the slow hop — see :func:`site_allreduce`.
+
+    A multi-hop `path` (Forwarder route) executes with the bottleneck hop's
+    knobs — the slow hop is where chunking/streams matter — but records a
+    traffic plan for *every* hop, so `MPW.Report()` shows per-hop stats.
     """
     if path.axis not in manual_axes_present(path.axis):
         return tree  # axis absent (single-pod): nothing to cross
+    if site_groups is not None:
+        return site_allreduce(tree, path, site_groups, dims=dims)
     leaves, treedef = jax.tree.flatten(tree)
-    if dims is None:
-        dim_list: list[Optional[int]] = [0 if l.ndim else None for l in leaves]
-    else:
-        dim_list = (dims if isinstance(dims, list)
-                    else jax.tree.leaves(dims, is_leaf=lambda x: x is None))
-        dim_list = [d if (d is not None) else (0 if l.ndim else None)
-                    for l, d in zip(leaves, dim_list)]
+    dim_list = st.normalize_dims(leaves, dims)
     chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
     # trace-time: the plan is static per executable; record its shape once
-    tel.note_plan(path.key, **st.plan_summary(
+    tel.note_plan(tel_key or path.key, **st.plan_summary(
         chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
+    if path.hops:
+        _note_hop_plans(path, leaves, dim_list)
 
     # pacing: only ceil(streams * pacing) streams in flight per wave
     pace = max(0.0, min(1.0, float(path.comm.pacing)))
@@ -98,6 +106,72 @@ def streamed_psum(tree, path: WidePath, dims=None):
     return jax.tree.unflatten(treedef, out_leaves)
 
 
+def site_allreduce(tree, path: WidePath, site_groups, dims=None):
+    """Topology-aware hierarchical psum over the pod axis: reduce intra-site
+    before crossing the slow hop.
+
+    `site_groups` partitions the pod-axis indices into sites (from
+    :meth:`Topology.pod_groups`).  Three stages, two collectives:
+
+      1. **intra-site reduce** — psum with `axis_index_groups`, over the fast
+         LAN links (cheap; every pod at a site ends with the site-sum);
+      2. **gateway mask** — only the first pod of each site keeps its value
+         (the paper's Forwarder host: the one machine with WAN connectivity);
+      3. **cross-site exchange** — a chunked/streamed full-axis psum of the
+         masked values; the sum over gateways is the global sum and the psum
+         delivers it to every pod, so the exchange doubles as the in-site
+         broadcast.
+
+    Slow-hop bytes: only S site-sums cross the WAN instead of P
+    pod-contributions — the reduction a flat psum cannot express.  Per-stage
+    traffic plans land under `{path.key}/intra` and `{path.key}/wan` (or the
+    route's per-hop keys when the path is multi-hop).
+    """
+    groups = [list(g) for g in site_groups]
+    if len({len(g) for g in groups}) > 1:
+        # TPU psum lowering requires equal-size axis_index_groups; fail the
+        # same way everywhere (and before the axis guard) rather than only
+        # on the production platform
+        raise ValueError(
+            f"site_allreduce needs equal pods per site, got sizes "
+            f"{[len(g) for g in groups]}; give every site the same n_pods "
+            f"(routing/forwarding has no such constraint)")
+    if path.axis not in manual_axes_present(path.axis):
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    dim_list = st.normalize_dims(leaves, dims)
+
+    # stage 1: intra-site reduction (fast links; unchunked — LAN alpha is
+    # negligible, the paper uses 1 stream locally)
+    reduced = [jax.lax.psum(l, path.axis, axis_index_groups=groups)
+               for l in leaves]
+    chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
+    tel.note_plan(f"{path.key}/intra", **st.plan_summary(
+        chunks, st.assign_streams(chunks, 1), 1, path.chunk_bytes, 1.0))
+
+    # stage 2: gateway mask — non-gateway pods contribute zero to the WAN
+    idx = jax.lax.axis_index(path.axis)
+    gateways = jnp.asarray([g[0] for g in groups], jnp.int32)
+    is_gw = jnp.any(idx == gateways)
+    masked = [jnp.where(is_gw, l, jnp.zeros_like(l)) for l in reduced]
+
+    # stage 3: cross-site exchange over the WAN path knobs; the psum of
+    # gateway-only site-sums is the global sum, delivered everywhere
+    wan_key = None if path.hops else f"{path.key}/wan"
+    return streamed_psum(jax.tree.unflatten(treedef, masked), path,
+                         dims=dim_list, tel_key=wan_key)
+
+
+def _note_hop_plans(path: WidePath, leaves, dim_list) -> None:
+    """Record a per-hop traffic plan for a multi-hop path: the same payload
+    crosses every hop, but each hop chunks it with its own knobs."""
+    for i, hop in enumerate(path.route):
+        chunks = st.plan_chunks(leaves, dim_list, hop.chunk_bytes)
+        buckets = st.assign_streams(chunks, hop.streams)
+        tel.note_plan(path.hop_key(i), **st.plan_summary(
+            chunks, buckets, hop.streams, hop.chunk_bytes, hop.comm.pacing))
+
+
 def flat_allreduce(tree, axes: Sequence[str]):
     axes = manual_axes_present(*axes)
     if not axes:
@@ -106,7 +180,8 @@ def flat_allreduce(tree, axes: Sequence[str]):
 
 
 def hierarchical_allreduce(tree, path: WidePath, data_axes: Sequence[str],
-                           dims, keep_scattered: bool = False):
+                           dims, keep_scattered: bool = False,
+                           site_groups=None):
     """RS(data) -> streamed cross-pod psum -> AG(data).
 
     `dims` is the per-leaf scatter-dim tree (from param.tree_fsdp_dims).
@@ -126,7 +201,8 @@ def hierarchical_allreduce(tree, path: WidePath, data_axes: Sequence[str],
 
     scat = [rs(g, d) for g, d in zip(leaves, dim_list)]
     scat_tree = jax.tree.unflatten(treedef, scat)
-    synced = streamed_psum(scat_tree, path, dims=dim_list)
+    synced = streamed_psum(scat_tree, path, dims=dim_list,
+                           site_groups=site_groups)
     if keep_scattered:
         return synced
 
@@ -162,8 +238,12 @@ def gateway_allreduce(tree, path: WidePath, data_axes: Sequence[str]):
 
 
 def wide_allreduce(tree, path: WidePath, *, data_axes: Sequence[str] = ("data",),
-                   dims=None, keep_scattered: bool = False):
-    """Dispatch on CommConfig.mode. The one entry point the runtime uses."""
+                   dims=None, keep_scattered: bool = False, site_groups=None):
+    """Dispatch on CommConfig.mode. The one entry point the runtime uses.
+
+    `site_groups` (Topology.pod_groups) makes the hierarchical mode's
+    cross-pod stage site-aware: intra-site reduction over fast links before
+    the slow hop is crossed (see :func:`site_allreduce`)."""
     mode = path.comm.mode
     if mode == "flat":
         return flat_allreduce(tree, tuple(data_axes) + (path.axis,))
@@ -171,7 +251,8 @@ def wide_allreduce(tree, path: WidePath, *, data_axes: Sequence[str] = ("data",)
         return gateway_allreduce(tree, path, data_axes)
     if mode == "hierarchical":
         return hierarchical_allreduce(tree, path, data_axes, dims,
-                                      keep_scattered=keep_scattered)
+                                      keep_scattered=keep_scattered,
+                                      site_groups=site_groups)
     raise ValueError(f"unknown comm mode {mode!r}")
 
 

@@ -1,14 +1,18 @@
 """Point-to-point and relay primitives over the pod ring (MPW_Send/Recv
-between endpoints, MPW_Cycle, MPW_Relay).
+between endpoints, MPW_Cycle, MPW_Relay), plus the multi-hop Forwarder data
+plane (`forward`).
 
 Pods form a ring over the "pod" mesh axis; sends are collective_permute
 (ppermute) shifts.  Inside the manual-DP shard_map these are the explicit
 cross-pod messages of the paper — used by the coupled-application example
-(the bloodflow scenario) and by the relay benchmarks.
+(the bloodflow scenario) and by the relay benchmarks.  A multi-hop
+:class:`~repro.core.path.WidePath` (a Forwarder route) executes as one
+store-and-forward `pod_shift` per hop, each with that hop's own chunking and
+stream knobs and its own telemetry slot.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,20 +27,38 @@ def _ring_perm(n: int, shift: int) -> list[tuple[int, int]]:
     return [(i, (i + shift) % n) for i in range(n)]
 
 
-def pod_shift(tree, path: WidePath, shift: int = 1):
+def pod_shift(tree, path: WidePath, shift: int = 1, dims=None,
+              chunk_bytes: Optional[int] = None,
+              streams: Optional[int] = None,
+              tel_key: Optional[str] = None, pacing: Optional[float] = None):
     """Send the payload to the pod `shift` positions ahead on the ring,
-    receive from the one behind (chunked over the path's streams)."""
+    receive from the one behind (chunked over the path's streams).
+
+    `dims` carries each leaf's scatter dim (the dim that is *not* TP-sharded
+    — streams.py's chunking contract), exactly as `streamed_psum` takes it;
+    leaves without a stated dim fall back to dim 0, which is only correct
+    for unsharded/replicated leaves.  Multi-hop paths relay hop by hop
+    (store-and-forward); `shift` then scales the whole route.
+    """
     if path.axis not in manual_axes_present(path.axis):
         return tree
+    if path.hops:
+        out = tree
+        for _ in range(max(1, abs(int(shift)))):
+            out = forward(out, path, dims=dims, reverse=shift < 0)
+        return out
     n = jax.lax.axis_size(path.axis)
     perm = _ring_perm(n, shift)
 
     leaves, treedef = jax.tree.flatten(tree)
-    dims = [0 if l.ndim else None for l in leaves]
-    chunks = st.plan_chunks(leaves, dims, path.chunk_bytes)
-    buckets = st.assign_streams(chunks, path.streams)
-    tel.note_plan(path.key, **st.plan_summary(
-        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
+    dim_list = st.normalize_dims(leaves, dims)
+    cb = chunk_bytes if chunk_bytes is not None else path.chunk_bytes
+    ns = streams if streams is not None else path.streams
+    pc = pacing if pacing is not None else path.comm.pacing
+    chunks = st.plan_chunks(leaves, dim_list, cb)
+    buckets = st.assign_streams(chunks, ns)
+    tel.note_plan(tel_key or path.key,
+                  **st.plan_summary(chunks, buckets, ns, cb, pc))
     done: dict[int, list] = {i: [] for i in range(len(leaves))}
     for bucket in buckets:
         dep = jnp.zeros((), jnp.float32)
@@ -51,15 +73,39 @@ def pod_shift(tree, path: WidePath, shift: int = 1):
     return jax.tree.unflatten(treedef, out)
 
 
-def sendrecv(send_tree, path: WidePath, shift: int = 1):
+def forward(tree, path: WidePath, dims=None, reverse: bool = False):
+    """Store-and-forward relay along `path.route` (the Forwarder data plane).
+
+    Each hop is an independent chunked transfer with the hop's own knobs: the
+    relay site holds the full message between hops, exactly as the paper's
+    Forwarder process does with its receive/send buffer pair.  Per-hop
+    traffic plans land in per-hop telemetry slots (`path.hop_key(i)`).
+    `reverse` runs the route back to front with negated shifts (the return
+    direction of a bidirectional route).
+    """
+    if path.axis not in manual_axes_present(path.axis):
+        return tree
+    route = path.route
+    order = range(len(route) - 1, -1, -1) if reverse else range(len(route))
+    out = tree
+    for i in order:
+        hop = route[i]
+        out = pod_shift(out, path.with_(hops=()), -hop.shift if reverse else hop.shift,
+                        dims=dims, chunk_bytes=hop.chunk_bytes,
+                        streams=hop.streams, pacing=hop.comm.pacing,
+                        tel_key=path.hop_key(i))
+    return out
+
+
+def sendrecv(send_tree, path: WidePath, shift: int = 1, dims=None):
     """MPW_SendRecv: symmetric exchange with the ring neighbour.
 
     Returns the payload received from the pod `shift` behind.
     """
-    return pod_shift(send_tree, path, shift)
+    return pod_shift(send_tree, path, shift, dims=dims)
 
 
-def cycle(recv_from_path: WidePath, send_on_path: WidePath, tree):
+def cycle(recv_from_path: WidePath, send_on_path: WidePath, tree, dims=None):
     """MPW_Cycle: receive a buffer over one path, forward it over another.
 
     On a pod ring this composes two shifts: data arrives from the previous
@@ -67,15 +113,18 @@ def cycle(recv_from_path: WidePath, send_on_path: WidePath, tree):
     block of sustained relays across >2 machines (the paper's 3- and
     4-supercomputer runs).
     """
-    received = pod_shift(tree, recv_from_path, 1)
-    return pod_shift(received, send_on_path, 1)
+    received = pod_shift(tree, recv_from_path, 1, dims=dims)
+    return pod_shift(received, send_on_path, 1, dims=dims)
 
 
-def relay(tree, path: WidePath, hops: int):
-    """MPW_Relay: sustained forwarding for `hops` ring steps."""
+def relay(tree, path: WidePath, hops: int, dims=None):
+    """MPW_Relay: sustained forwarding for `hops` ring steps.  A multi-hop
+    path relays along its own route instead (its hop count governs)."""
+    if path.hops:
+        return forward(tree, path, dims=dims)
     out = tree
     for _ in range(max(1, hops)):
-        out = pod_shift(out, path, 1)
+        out = pod_shift(out, path, 1, dims=dims)
     return out
 
 

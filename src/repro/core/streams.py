@@ -42,15 +42,39 @@ def plan_chunks(leaves: list, dims: list[Optional[int]], chunk_bytes: int
         bytes_per_row = nb // n
         rows = max(1, chunk_bytes // max(bytes_per_row, 1))
         start = 0
+        planned = 0
         while start < n:
             size = min(rows, n - start)
-            chunks.append(Chunk(i, dim, start, size, size * bytes_per_row))
+            # the last chunk absorbs the truncation remainder of nb // n, so
+            # summed chunk nbytes (plan_summary.payload_bytes, telemetry GB/s)
+            # exactly equals the leaf's bytes
+            cb = nb - planned if start + size >= n else size * bytes_per_row
+            chunks.append(Chunk(i, dim, start, size, cb))
+            planned += cb
             start += size
+        assert planned == nb, (planned, nb)
     return chunks
 
 
+def normalize_dims(leaves: list, dims=None) -> list[Optional[int]]:
+    """Per-leaf scatter dims with the unsharded dim-0 fallback.
+
+    `dims` may be None (fallback everywhere), a flat list, or a pytree whose
+    leaves align with `leaves` (None leaves kept via is_leaf).  A leaf with no
+    stated scatter dim is sliced along dim 0 — only safe when dim 0 is not
+    TP-sharded, which holds for the replicated fallback leaves this covers.
+    """
+    if dims is None:
+        return [0 if l.ndim else None for l in leaves]
+    dim_list = (dims if isinstance(dims, list)
+                else jax.tree.leaves(dims, is_leaf=lambda x: x is None))
+    return [d if (d is not None and d >= 0) else (0 if l.ndim else None)
+            for l, d in zip(leaves, dim_list)]
+
+
 def assign_streams(chunks: list[Chunk], streams: int) -> list[list[Chunk]]:
-    """Round-robin chunks onto streams by descending size (balanced load)."""
+    """Greedy longest-processing-time balancing: chunks in descending size
+    order each go to the currently least-loaded stream."""
     streams = max(1, min(streams, max(1, len(chunks))))
     buckets: list[list[Chunk]] = [[] for _ in range(streams)]
     loads = [0] * streams

@@ -153,10 +153,18 @@ class Telemetry:
         yield
         self.record(key, time.perf_counter() - t0, nbytes=nbytes, step=step)
 
-    def report(self) -> dict[str, dict]:
-        """{path key: summary dict} for every path seen this process."""
+    def report(self, prefix: Optional[str] = None) -> dict[str, dict]:
+        """{path key: summary dict} for every path seen this process.
+
+        `prefix` filters to one path and its hops: a multi-hop path records
+        under its own key plus one slot per hop (``{key}/hop{i}:{link}``) or
+        per hierarchical stage (``{key}/intra``, ``{key}/wan``), so
+        ``report(prefix=path.key)`` returns the whole per-hop breakdown."""
         with self._lock:
             paths = list(self._paths.items())   # snapshot: reset() may race
+        if prefix is not None:
+            paths = [(k, p) for k, p in paths
+                     if k == prefix or k.startswith(prefix + "/")]
         return {k: p.summary() for k, p in paths}
 
     def format_report(self) -> str:

@@ -180,10 +180,25 @@ def _map_with_dims(fn, tree, dims):
 # train step
 # ---------------------------------------------------------------------------
 
-def build_train_step(rc: RunConfig, mesh) -> StepBundle:
+def build_train_step(rc: RunConfig, mesh, *, route=None,
+                     site_groups=None) -> StepBundle:
+    """`route` (a :class:`repro.core.topology.Route`) makes the cross-pod
+    path multi-hop: per-hop links/knobs from the route's LinkProfiles, with
+    the bottleneck leg driven by ``rc.comm`` (the autotuner's slot), and
+    per-hop plans in telemetry.  `site_groups` (Topology.pod_groups) makes
+    the cross-pod psum site-hierarchical: intra-site reduction first, only
+    gateway pods cross the slow hop."""
     model = build_model(rc.model)
     defs = model.param_defs()
     manual = set(dp_axes_of(mesh))
+    if site_groups is not None:
+        npods = int(mesh.shape.get("pod", 1))
+        total = sorted(p for g in site_groups for p in g)
+        if "pod" not in mesh.axis_names:
+            site_groups = None          # single-pod smoke: nothing to group
+        elif total != list(range(npods)):
+            raise ValueError(f"site_groups {site_groups} must tile the pod "
+                             f"axis of size {npods}")
     tp = int(mesh.shape.get("model", 1))
     data_size = int(mesh.shape.get("data", 1))
     zero = bool(rc.train.zero1 and rc.comm.mode == "hierarchical"
@@ -200,8 +215,11 @@ def build_train_step(rc: RunConfig, mesh) -> StepBundle:
     dp = tuple(a for a in ("pod", "data") if a in manual)
     batch_specs = jax.tree.map(lambda _: P(dp), _batch_template(rc))
 
-    # MPWide path over the pod axis (autotuned to the cross-pod payload)
+    # MPWide path over the pod axis (autotuned to the cross-pod payload);
+    # a route turns it into the Forwarder chain, slow leg driven by rc.comm
     path = WidePath(axis="pod", comm=rc.comm, link=INTERPOD, name="train")
+    if route is not None:
+        path = path.with_hops(route.as_hops(bottleneck_comm=rc.comm))
     payload = _param_bytes(defs) // (data_size if zero else 1)
     path = autotune_path(path, payload, world=int(mesh.shape.get("pod", 1)))
     replan = None
@@ -223,7 +241,8 @@ def build_train_step(rc: RunConfig, mesh) -> StepBundle:
 
     def _cross_pod(grads):
         if rc.comm.compress == "none" or tp <= 1:
-            return streamed_psum(grads, path, dims=dims)
+            return streamed_psum(grads, path, dims=dims,
+                                 site_groups=site_groups)
         # compressed transfers quantize/pad/gather — GSPMD propagation
         # through those ops replicates the "model"-sharded dims (§Perf P8:
         # 16x inflation); a nested fully-manual shard_map keeps every byte
@@ -233,7 +252,8 @@ def build_train_step(rc: RunConfig, mesh) -> StepBundle:
                                 grad_param_specs,
                                 is_leaf=lambda x: isinstance(x, P))
         inner = jax.shard_map(
-            lambda g: streamed_psum(g, path, dims=dims),
+            lambda g: streamed_psum(g, path, dims=dims,
+                                    site_groups=site_groups),
             in_specs=(tp_specs,), out_specs=tp_specs,
             axis_names={"model"}, check_vma=False)
         return inner(grads)
@@ -251,7 +271,8 @@ def build_train_step(rc: RunConfig, mesh) -> StepBundle:
                     grads, dims)
             return _cross_pod(grads)
         from repro.core.collectives import hierarchical_allreduce
-        return hierarchical_allreduce(grads, path, ("data",), dims)
+        return hierarchical_allreduce(grads, path, ("data",), dims,
+                                      site_groups=site_groups)
 
     def loss_fn(params, mb):
         p = gather_top(params)
@@ -353,6 +374,9 @@ def _note_path_plan(defs, dims, path: WidePath, shard: int) -> None:
     buckets = st.assign_streams(chunks, path.streams)
     tel.note_plan(path.key, **st.plan_summary(
         chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
+    if path.hops:
+        from repro.core.collectives import _note_hop_plans
+        _note_hop_plans(path, eff_leaves, eff_dims)
 
 
 # ---------------------------------------------------------------------------

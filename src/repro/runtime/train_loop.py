@@ -26,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
-from repro.core.autotune import OnlineTuner
+from repro.core.autotune import OnlineTuner, hop_shares
 from repro.core.telemetry import get_telemetry
 from repro.runtime.step import StepBundle, build_train_step
 
@@ -61,10 +61,16 @@ class Trainer:
     def __init__(self, rc: RunConfig, mesh, *, ckpt_dir: Optional[str] = None,
                  replica_dir: Optional[str] = None, ckpt_every: int = 50,
                  keep: int = 3, fault_hook: Optional[Callable[[int], None]] = None,
-                 autotune_every: int = 0):
+                 autotune_every: int = 0, route=None, site_groups=None):
         self.rc = rc
         self.mesh = mesh
-        self.bundle: StepBundle = build_train_step(rc, mesh)
+        # multi-site wiring: `route` makes the cross-pod path a multi-hop
+        # Forwarder chain (per-hop knobs + telemetry); `site_groups` makes
+        # the cross-pod psum reduce intra-site before the slow hop
+        self.route = route
+        self.site_groups = site_groups
+        self.bundle: StepBundle = build_train_step(rc, mesh, route=route,
+                                                   site_groups=site_groups)
         self.ckpt_every = ckpt_every
         self.fault_hook = fault_hook
         self.detector = StragglerDetector()
@@ -154,6 +160,7 @@ class Trainer:
                 if self.rc.comm.mode != "flat":   # flat: path carries nothing
                     get_telemetry().record(self.bundle.path.key, dt,
                                            step=self.step)
+                    self._record_hop_samples(dt)
             if self.tuner is not None:
                 new_cfg = self.tuner.observe(dt)
                 if new_cfg is not None:
@@ -176,6 +183,20 @@ class Trainer:
             self.manager.save(self.step, self.state, block=True)
         return self.history
 
+    def _record_hop_samples(self, dt: float) -> None:
+        """Per-hop telemetry for a multi-hop train path: split the step's
+        wall time across hops by `autotune.hop_shares` (the same modeled
+        split RouteTuner feeds its controllers with).  The per-hop GB/s in
+        MPW.Report() then reflects which leg dominates."""
+        path = self.bundle.path
+        if not path.hops:
+            return
+        tel = get_telemetry()
+        plan = tel.path(path.key).plan
+        shares = hop_shares(path.route, plan.payload_bytes if plan else 0)
+        for i in range(path.n_hops):
+            tel.record(path.hop_key(i), dt * shares[i], step=self.step)
+
     # -- online autotuning ----------------------------------------------------
     @staticmethod
     def _cfg_key(cfg: dict) -> tuple:
@@ -192,7 +213,9 @@ class Trainer:
         self.rc = dataclasses.replace(self.rc, comm=comm)
         key = self._cfg_key(cfg)
         if key not in self._bundles:
-            self._bundles[key] = build_train_step(self.rc, self.mesh)
+            self._bundles[key] = build_train_step(
+                self.rc, self.mesh, route=self.route,
+                site_groups=self.site_groups)
             self._fresh_compile = True   # next step pays XLA compilation
         self.bundle = self._bundles[key]
         if self.bundle.replan is not None:

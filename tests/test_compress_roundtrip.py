@@ -1,0 +1,55 @@
+"""quant_chunk/dequant_chunk round-trips: the per-chunk int8 compression the
+cross-pod path applies must survive scalar leaves, extents that are not a
+multiple of QBLOCK, and non-trailing scatter dims."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compress import QBLOCK, dequant_chunk, quant_chunk
+
+
+def _roundtrip(x, dim):
+    q, s, meta = quant_chunk(jnp.asarray(x), dim)
+    return np.asarray(dequant_chunk(q, s, meta))
+
+
+def test_scalar_leaf_roundtrip():
+    """0-dim leaves (loss scale, step counter) quantize via a (1,1) view and
+    come back as the same scalar shape/dtype."""
+    x = jnp.float32(3.25)
+    y = _roundtrip(x, 0)
+    assert y.shape == ()
+    assert y == pytest.approx(3.25, rel=1e-2)
+
+
+def test_non_multiple_of_qblock_extent():
+    """Extents that don't divide QBLOCK are padded for the kernel and the
+    pad must be sliced back off — shape and values round-trip."""
+    for n in (1, 5, QBLOCK - 1, QBLOCK + 3, 2 * QBLOCK + 17):
+        x = np.linspace(-4.0, 4.0, n, dtype=np.float32)
+        y = _roundtrip(x, 0)
+        assert y.shape == (n,)
+        # blockwise absmax int8: error bounded by scale = absmax/127
+        assert np.max(np.abs(y - x)) <= 4.0 / 127 + 1e-6
+
+
+def test_non_trailing_dim_roundtrip():
+    """Quantizing along a non-last scatter dim moves it to the back and must
+    move it home on dequant."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(3, 7, 5).astype(np.float32)
+    for dim in (0, 1, 2):
+        y = _roundtrip(x, dim)
+        assert y.shape == x.shape
+        assert np.max(np.abs(y - x)) <= np.max(np.abs(x)) / 127 + 1e-6
+
+
+def test_bf16_leaf_roundtrip_keeps_dtype():
+    x = jnp.asarray(np.arange(10.0, dtype=np.float32)).astype(jnp.bfloat16)
+    q, s, meta = quant_chunk(x, 0)
+    y = dequant_chunk(q, s, meta)
+    assert y.dtype == jnp.bfloat16
+    assert np.max(np.abs(np.asarray(y, np.float32)
+                         - np.arange(10.0, dtype=np.float32))) <= 9.0 / 127 + 0.1

@@ -1,0 +1,80 @@
+"""DataGather sync_once: mirror exactness (orphan files AND directories are
+pruned) and tolerance to files deleted from src concurrently with the walk —
+the checkpoint GC races the mirror thread in production."""
+from __future__ import annotations
+
+import os
+
+from repro.checkpoint.replicate import sync_once
+
+
+def _write(path: str, text: str = "x") -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def test_prune_removes_empty_orphan_dirs(tmp_path):
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "step_10", "shard0.bin"))
+    _write(os.path.join(src, "step_10", "sub", "meta.json"))
+    _write(os.path.join(src, "step_20", "shard0.bin"))
+    assert sync_once(src, dst) == 3
+    assert os.path.isfile(os.path.join(dst, "step_10", "sub", "meta.json"))
+
+    # checkpoint GC deletes step_10 from src: the mirror must drop the files
+    # AND the now-empty directory tree, not leave orphan dirs behind
+    import shutil
+    shutil.rmtree(os.path.join(src, "step_10"))
+    sync_once(src, dst)
+    assert not os.path.exists(os.path.join(dst, "step_10"))
+    assert os.path.isfile(os.path.join(dst, "step_20", "shard0.bin"))
+
+
+def test_nested_orphan_dirs_removed_bottom_up(tmp_path):
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "a", "b", "c", "deep.bin"))
+    sync_once(src, dst)
+    import shutil
+    shutil.rmtree(os.path.join(src, "a"))
+    sync_once(src, dst)
+    assert not os.path.exists(os.path.join(dst, "a"))
+    assert os.path.isdir(dst)            # the mirror root itself survives
+
+
+def test_dir_kept_when_it_still_exists_in_src(tmp_path):
+    """An empty-but-live src directory is mirrored, not pruned."""
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    os.makedirs(os.path.join(src, "empty_live"))
+    _write(os.path.join(src, "f.bin"))
+    sync_once(src, dst)
+    sync_once(src, dst)                  # prune pass must not remove it
+    assert os.path.isdir(os.path.join(dst, "empty_live"))
+
+
+def test_concurrent_deletion_mid_walk(tmp_path, monkeypatch):
+    """A src file that vanishes between the walk and the stat/copy must not
+    crash the pass; remaining files still sync."""
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "vanishing.bin"), "a")
+    _write(os.path.join(src, "stable.bin"), "a")
+    assert sync_once(src, dst) == 2
+
+    # both files change; vanishing.bin is GC'd exactly when the copy pass
+    # stats it (os.path.getmtime on a vanished path used to crash the pass)
+    _write(os.path.join(src, "vanishing.bin"), "bb")
+    _write(os.path.join(src, "stable.bin"), "bb")
+    real_getmtime = os.path.getmtime
+
+    def racing_getmtime(p):
+        if p.endswith(os.path.join(src, "vanishing.bin")) and os.path.exists(p):
+            os.remove(p)                 # the GC got there first
+        return real_getmtime(p)          # raises FileNotFoundError for it
+
+    monkeypatch.setattr(os.path, "getmtime", racing_getmtime)
+    copied = sync_once(src, dst)         # must not raise
+    assert os.path.isfile(os.path.join(dst, "stable.bin"))
+    assert copied == 1                   # stable.bin updated, vanished skipped
+    monkeypatch.undo()
+    sync_once(src, dst)
+    assert not os.path.exists(os.path.join(dst, "vanishing.bin"))

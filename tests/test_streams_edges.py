@@ -87,6 +87,37 @@ def test_mixed_tree_balance_by_bytes():
     assert max(loads) <= 2 * (sum(loads) / len(loads)) + 2048
 
 
+def test_chunk_bytes_sum_exactly_across_shapes():
+    """Regression for the bytes_per_row = nb // n truncation: summed chunk
+    nbytes must equal leaf bytes exactly for every leaf (plan_chunks now
+    asserts this; payload_bytes / telemetry GB/s depend on it), including
+    prime extents, both cut dims, and tail chunks."""
+    leaves, dims = [], []
+    for shape in [(7, 3), (3, 5), (13, 4), (5, 7, 2), (31,), (2, 9)]:
+        for dtype in (jnp.bfloat16, jnp.float32, jnp.int8):
+            for d in range(len(shape)):
+                leaves.append(jnp.zeros(shape, dtype))
+                dims.append(d)
+    for chunk_bytes in (1, 16, 48, 1 << 20):
+        chunks = plan_chunks(leaves, dims, chunk_bytes=chunk_bytes)
+        per_leaf: dict[int, int] = {}
+        for c in chunks:
+            per_leaf[c.leaf] = per_leaf.get(c.leaf, 0) + c.nbytes
+        for i, l in enumerate(leaves):
+            assert per_leaf[i] == leaf_bytes(l), (i, chunk_bytes)
+
+
+def test_chunk_bytes_remainder_absorbed_by_last_chunk():
+    """A (7, 5) f32 leaf cut along dim 0 into 2-row chunks: 3 full chunks +
+    one 1-row tail; byte totals must be exact whatever the cut."""
+    x = jnp.zeros((7, 5), jnp.float32)   # 140 B; 20 B rows
+    chunks = plan_chunks([x], [0], chunk_bytes=48)   # 2 rows per chunk
+    assert [c.size for c in chunks] == [2, 2, 2, 1]
+    assert sum(c.nbytes for c in chunks) == 140
+    s = plan_summary(chunks, assign_streams(chunks, 2), 2, 48)
+    assert s["payload_bytes"] == leaf_bytes(x) == 140
+
+
 def test_plan_summary_fields():
     leaves = [jnp.zeros((64, 64), jnp.float32), jnp.zeros((), jnp.float32)]
     chunks = plan_chunks(leaves, [0, None], chunk_bytes=2048)
