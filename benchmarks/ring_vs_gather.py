@@ -1,0 +1,161 @@
+"""Ring vs gather collectives — the bandwidth-optimal WAN stage.
+
+  (a) MODELED: per-pod wire bytes and cross-pod throughput for the
+      gather-based compressed all-reduce (`algo="psum"` + bf16/int8: every
+      pod receives P-1 remote shards, linear in P) vs the ring
+      reduce-scatter + all-gather (`algo="ring"`: 2(P-1)/P, the bandwidth
+      lower bound), swept over P in {2,4,8} x compress in {none,bf16,int8}.
+      Throughput is bandwidth-model (payload / (wire/bw)): under chunk
+      pipelining the per-hop alphas of successive chunks overlap, so
+      bandwidth is what the slow link exposes.
+  (b) MEASURED (fake CPU devices): ring/ring2 numerics vs psum on a real
+      4-pod collective, with the per-algorithm traffic plans (modeled wire
+      bytes included) pulled from telemetry.
+
+Acceptance (asserted below): int8 ring moves <= 2(P-1)/P * n/4 bytes per
+pod, and models >=2x the gather path's cross-pod throughput at P=4 (>=4x
+at P=8 — the ratio is P/2).
+
+Set WIDEJAX_BENCH_DRY=1 (benchmarks/run.py --dry) for a tiny payload.
+`benchmarks/run.py --json` exports RESULTS (modeled GB/s + wire bytes) for
+cross-PR perf tracking.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import run_multidev
+from repro.core.path import WAN_LONDON_POZNAN
+from repro.core.ring import wire_bytes_per_pod
+
+DRY = bool(os.environ.get("WIDEJAX_BENCH_DRY"))
+PAYLOAD = (1 << 16) if DRY else (64 << 20)   # f32 gradient bytes per pod
+
+# machine-readable section results, exported by benchmarks/run.py --json
+RESULTS: dict = {}
+
+
+def modeled() -> str:
+    link = WAN_LONDON_POZNAN
+    bw = link.bandwidth_Bps
+    rows = ["| P | compress | gather wire/pod | ring wire/pod | "
+            "gather GB/s | ring GB/s | ring speedup |",
+            "|---|---|---|---|---|---|---|"]
+    RESULTS["modeled"] = []
+    for P in (2, 4, 8):
+        for compress in ("none", "bf16", "int8"):
+            wg = wire_bytes_per_pod(PAYLOAD, P, algo="psum",
+                                    compress=compress)
+            wr = wire_bytes_per_pod(PAYLOAD, P, algo="ring",
+                                    compress=compress)
+            tg, tr = PAYLOAD / (wg / bw), PAYLOAD / (wr / bw)
+            speedup = wg / wr
+            rows.append(
+                f"| {P} | {compress} | {wg / (1 << 20):.2f} MiB "
+                f"| {wr / (1 << 20):.2f} MiB | {tg / 1e9:.3f} | {tr / 1e9:.3f} "
+                f"| {speedup:.1f}x |")
+            RESULTS["modeled"].append(dict(
+                P=P, compress=compress, payload_bytes=PAYLOAD,
+                gather_wire_bytes=wg, ring_wire_bytes=wr,
+                gather_GBps=tg / 1e9, ring_GBps=tr / 1e9, speedup=speedup))
+            # acceptance: the int8 ring is bandwidth-optimal and beats the
+            # gather path by P/2 (>=2x at P=4, >=4x at P=8)
+            if compress == "int8":
+                assert wr <= 2 * (P - 1) / P * PAYLOAD / 4 + 1e-9, (P, wr)
+                assert speedup >= P / 2 - 1e-9, (P, speedup)
+    return "\n".join(rows + [
+        "",
+        f"Payload {PAYLOAD / (1 << 20):.2f} MiB f32 per pod over "
+        f"{link.name} ({bw / 1e6:.0f} MB/s).  The gather-based compressed "
+        "path receives P-1 remote shards per pod — wire bytes grow linearly "
+        "in P and *cancel the compression win* by P=8 (7/4 > 1): compression "
+        "plus gather can move MORE bytes than an uncompressed ring.  The "
+        "ring stays at the 2(P-1)/P bound at every P, so int8-on-the-wire "
+        "keeps its full 4x; `ring2` moves the same bytes in half the "
+        "latency-step depth.  (int8 scale sideband: +4/256 = +1.6%, "
+        "excluded from the model like headers.)",
+    ])
+
+
+_MEASURE = r"""
+import json, os, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import WidePath, streamed_psum, get_telemetry
+from repro.configs.base import CommConfig
+
+dry = bool(os.environ.get("WIDEJAX_BENCH_DRY"))
+N = ((1 << 16) if dry else (16 << 20)) // 4
+mesh = jax.make_mesh((4, 2), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+payload = {"g": (jnp.arange(N, dtype=jnp.float32) % 1000) / 1000.0 + 0.5}
+out = {}
+for algo in ("psum", "ring", "ring2"):
+    for compress in ("none", "int8"):
+        comm = CommConfig(streams=4, chunk_mb=max(0.0625, N * 4 / 4 / 2**20),
+                          compress=compress, algo=algo)
+        path = WidePath(axis="pod", comm=comm, name=f"rvg-{algo}-{compress}")
+        def body(t):
+            r = jax.lax.axis_index("pod").astype(jnp.float32)
+            return streamed_psum(jax.tree.map(lambda x: x * (1 + r), t),
+                                 path, dims={"g": 0})
+        fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P(),),
+                                   out_specs=P(), axis_names={"pod"},
+                                   check_vma=False))
+        with jax.set_mesh(mesh):
+            got = fn(payload); jax.block_until_ready(got)
+            t0 = time.perf_counter()
+            got = fn(payload); jax.block_until_ready(got)
+            dt = time.perf_counter() - t0
+        want = payload["g"] * 10.0
+        err = float(jnp.max(jnp.abs(got["g"] - want) / want))
+        plan = get_telemetry().path(path.key).plan
+        out[f"{algo}/{compress}"] = {
+            "err": err, "wall_s": dt, "n_chunks": plan.n_chunks,
+            "payload_bytes": plan.payload_bytes,
+            "wire_bytes": plan.wire_bytes, "algo": plan.algo}
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def measured() -> tuple[str, dict]:
+    res = run_multidev(_MEASURE, ndev=8, timeout=900)
+    for key, r in res.items():
+        tol = 0.08 if "int8" in key else 1e-5
+        assert r["err"] < tol, (key, r)          # numerics match psum's sum
+    base = res["psum/none"]["wire_bytes"]
+    rows = ["| algo | compress | modeled wire/pod | vs psum/none | "
+            "rel err | wall (CPU devs) |",
+            "|---|---|---|---|---|---|"]
+    for key, r in res.items():
+        rows.append(f"| {key.split('/')[0]} | {key.split('/')[1]} "
+                    f"| {r['wire_bytes'] / (1 << 20):.3f} MiB "
+                    f"| {r['wire_bytes'] / base:.2f}x | {r['err']:.1e} "
+                    f"| {r['wall_s'] * 1e3:.1f} ms |")
+    ratio = res["psum/int8"]["wire_bytes"] / res["ring/int8"]["wire_bytes"]
+    assert ratio >= 2.0 - 1e-9, ratio            # acceptance at P=4
+    rows += [
+        "",
+        f"All six engines produce the same global sum (int8 within "
+        f"requantization tolerance); the int8 ring plans "
+        f"**{ratio:.1f}x fewer wire bytes** than the int8 gather at P=4. "
+        "CPU wall times validate numerics, not WAN bandwidth.",
+    ]
+    return "\n".join(rows), res
+
+
+def run() -> str:
+    measured_md, res = measured()
+    RESULTS["measured"] = res
+    return "\n".join([
+        "## Ring vs gather — bandwidth-optimal WAN collectives "
+        "(int8 on the wire at every hop)", "",
+        "### Modeled (per-pod wire bytes & throughput, London-Poznan)", "",
+        modeled(), "",
+        "### Measured (real collectives, 8 fake CPU devices, P=4)", "",
+        measured_md, "",
+    ])
+
+
+if __name__ == "__main__":
+    print(run())

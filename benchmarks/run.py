@@ -4,10 +4,16 @@ report.  ``PYTHONPATH=src python -m benchmarks.run``
 ``--dry`` runs every section in tiny/smoke mode (exported to sections as
 WIDEJAX_BENCH_DRY=1: shrunk payloads and iteration counts) — the CI smoke
 job uses it to catch benchmark drift at PR time without WAN-scale runtimes.
+
+``--json PATH`` additionally writes machine-readable results: per-section
+status/runtime plus whatever structured numbers a section exports via a
+module-level ``RESULTS`` dict (modeled GB/s, wire bytes, ...) — the
+cross-PR perf trajectory file (e.g. ``--json BENCH_3.json``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -18,9 +24,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,bloodflow,streams,autotune,"
-                         "multihop,roofline")
+                         "multihop,ring,roofline")
     ap.add_argument("--dry", action="store_true",
                     help="tiny payloads / few iterations (CI smoke mode)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-section machine-readable results "
+                         "(status, seconds, section RESULTS exports)")
     args = ap.parse_args()
     if args.dry:
         # sections and their multidev subprocesses read this
@@ -32,24 +41,38 @@ def main():
         "streams": ("benchmarks.streams_sweep", "streams sweep"),
         "autotune": ("benchmarks.autotune_convergence", "online autotune convergence"),
         "multihop": ("benchmarks.multihop_relay", "multi-hop relay & forwarder routing"),
+        "ring": ("benchmarks.ring_vs_gather", "ring vs gather collectives"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)
     failures = 0
+    report: dict = {"dry": bool(args.dry), "sections": {}}
     print("# WideJAX benchmarks (MPWide reproduction)"
           + (" — DRY/smoke mode" if args.dry else "") + "\n")
     for name in chosen:
         mod_name, desc = sections[name]
         t0 = time.time()
         print(f"\n<!-- section {name}: {desc} -->\n")
+        entry: dict = {"description": desc, "ok": False}
         try:
             mod = __import__(mod_name, fromlist=["run"])
             print(mod.run())
+            entry["ok"] = True
             print(f"_({name} completed in {time.time()-t0:.0f}s)_")
-        except Exception:  # noqa: BLE001
+        except Exception as e:  # noqa: BLE001
             failures += 1
+            entry["error"] = f"{type(e).__name__}: {e}"
             print(f"SECTION {name} FAILED:")
             traceback.print_exc(file=sys.stdout)
+        entry["seconds"] = round(time.time() - t0, 3)
+        results = getattr(sys.modules.get(mod_name), "RESULTS", None)
+        if results:
+            entry["results"] = results
+        report["sections"][name] = entry
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, default=float)
+        print(f"\n_(machine-readable results written to {args.json})_")
     sys.exit(1 if failures else 0)
 
 

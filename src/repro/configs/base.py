@@ -180,6 +180,12 @@ class CommConfig:
     compress: str = "none"       # none | bf16 | int8   (beyond-paper)
     autotune: bool = True        # MPW_setAutoTuning (default on, like paper)
     pacing: float = 1.0          # MPW_setPacingRate: fraction in flight
+    # cross-pod all-reduce algorithm (beyond-paper): "psum" lowers each
+    # chunk to one collective (gather-based when compressed: per-pod bytes
+    # grow linearly in pod count); "ring"/"ring2" are bandwidth-optimal
+    # ppermute rings with per-step requantization (ring2: bidirectional,
+    # half the latency-step depth) — see repro/core/ring.py
+    algo: str = "psum"           # psum | ring | ring2
 
 
 @dataclass(frozen=True)

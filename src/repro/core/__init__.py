@@ -1,5 +1,5 @@
-"""MPWide core: paths, streamed collectives, autotuner, telemetry, relay,
-multi-site topology/Forwarder, MPW_* API."""
+"""MPWide core: paths, streamed collectives, ring collectives, autotuner,
+telemetry, relay, multi-site topology/Forwarder, MPW_* API."""
 from repro.core.api import MPW  # noqa: F401
 from repro.core.autotune import (  # noqa: F401
     OnlineTuner,
@@ -33,6 +33,12 @@ from repro.core.path import (  # noqa: F401
     LinkSpec,
     WidePath,
     local_path,
+)
+from repro.core.ring import (  # noqa: F401
+    ring_all_gather,
+    ring_allreduce,
+    ring_reduce_scatter,
+    wire_bytes_per_pod,
 )
 from repro.core.telemetry import PathTelemetry, Telemetry, get_telemetry  # noqa: F401
 from repro.core.topology import (  # noqa: F401

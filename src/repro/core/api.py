@@ -129,6 +129,16 @@ class MPW:
     def setPacingRate(self, pid: int, rate: float) -> None:
         self.paths[pid].path = self.paths[pid].path.with_(pacing=rate)
 
+    def setAlgorithm(self, pid: int, algo: str) -> None:
+        """Select the cross-pod all-reduce algorithm (beyond the C API):
+        "psum" (one collective per chunk; gather-based when compressed),
+        "ring" / "ring2" (bandwidth-optimal ppermute rings — see
+        repro/core/ring.py)."""
+        from repro.core.ring import ALGOS
+        if algo not in ALGOS:
+            raise ValueError(f"unknown algo {algo!r}; have {ALGOS}")
+        self.paths[pid].path = self.paths[pid].path.with_(algo=algo)
+
     def setWin(self, pid: int, nbytes: int) -> None:
         # TCP window -> chunk payload sizing against the link BDP
         self.setChunkSize(pid, nbytes)
@@ -158,7 +168,8 @@ class MPW:
             else:
                 st.tuner = OnlineTuner(streams=p.streams,
                                        chunk_mb=p.comm.chunk_mb,
-                                       pacing=p.comm.pacing, window=window)
+                                       pacing=p.comm.pacing,
+                                       algo=p.comm.algo, window=window)
 
     def Observe(self, pid: int, seconds: float,
                 nbytes: Optional[int] = None,

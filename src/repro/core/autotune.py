@@ -106,6 +106,7 @@ STREAM_GRID: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 CHUNK_GRID_MB: tuple[float, ...] = (0.0625, 0.25, 1.0, 2.0, 4.0, 8.0,
                                     16.0, 32.0, 64.0)
 PACING_GRID: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+ALGO_GRID: tuple[str, ...] = ("psum", "ring", "ring2")
 
 
 def _seed(grid: list, value) -> int:
@@ -138,20 +139,29 @@ class OnlineTuner:
     than streams cannot feed them), and the diagonal is the only improving
     direction out of configs like (1 stream, one huge chunk).
 
+    The collective *algorithm* (`psum | ring | ring2`, CommConfig.algo) is a
+    fourth knob: which algorithm wins is payload-, pod-count- and
+    compression-dependent (rings win on bandwidth; the monolithic psum can
+    win tiny latency-bound payloads), so it is probed from measurements like
+    any other knob.  `tune_algo=False` pins it (per-hop RouteTuner legs are
+    ppermute shifts, where the all-reduce algorithm does not apply).
+
     `observe` returns the new knob dict to apply when the tuner wants a
     config change, else None.  The tuner never raises mid-training: any cost
     signal is accepted, convergence just stops proposing moves.
     """
 
-    KNOBS = ("streams", "chunk_mb", "pacing")
+    KNOBS = ("streams", "chunk_mb", "pacing", "algo")
 
     def __init__(self, streams: int = 32, chunk_mb: float = 8.0,
-                 pacing: float = 1.0, *, window: int = 5, warmup: int = 1,
+                 pacing: float = 1.0, *, algo: str = "psum",
+                 window: int = 5, warmup: int = 1,
                  rel_improvement: float = 0.02,
-                 tune_pacing: bool = True) -> None:
+                 tune_pacing: bool = True, tune_algo: bool = True) -> None:
         self.grids = {"streams": list(STREAM_GRID),
                       "chunk_mb": list(CHUNK_GRID_MB),
-                      "pacing": list(PACING_GRID)}
+                      "pacing": list(PACING_GRID),
+                      "algo": list(ALGO_GRID)}
         # seeds stay exact for any value the transfer engine itself accepts
         # (streams floor at 1, chunks at the 64 KiB engine floor, pacing
         # clamps into [0,1] — all mirroring WidePath/streamed_psum), so the
@@ -160,11 +170,13 @@ class OnlineTuner:
                     "chunk_mb": _seed(self.grids["chunk_mb"],
                                       max(0.0625, float(chunk_mb))),
                     "pacing": _seed(self.grids["pacing"],
-                                    max(0.0, min(1.0, float(pacing))))}
+                                    max(0.0, min(1.0, float(pacing)))),
+                    "algo": _seed(self.grids["algo"], str(algo))}
         self.window = max(1, int(window))
         self.warmup = max(0, int(warmup))
         self.rel = float(rel_improvement)
         self.tune_pacing = tune_pacing
+        self.tune_algo = tune_algo
         self.best_idx = dict(self.idx)
         self.best_cost: Optional[float] = None
         self.converged = False
@@ -174,11 +186,16 @@ class OnlineTuner:
         self._moves: list[dict] = []
 
     # -- public -------------------------------------------------------------
+    def _active(self) -> tuple:
+        # a pinned algo (tune_algo=False: ppermute-shift hops) is not
+        # reported — returned configs stay pure transfer knobs
+        return tuple(k for k in self.KNOBS if k != "algo" or self.tune_algo)
+
     def config(self) -> dict:
-        return {k: self.grids[k][self.idx[k]] for k in self.KNOBS}
+        return {k: self.grids[k][self.idx[k]] for k in self._active()}
 
     def best_config(self) -> dict:
-        return {k: self.grids[k][self.best_idx[k]] for k in self.KNOBS}
+        return {k: self.grids[k][self.best_idx[k]] for k in self._active()}
 
     def observe(self, seconds: float) -> Optional[dict]:
         """Feed one measured cost sample; returns knobs to apply or None."""
@@ -212,6 +229,8 @@ class OnlineTuner:
                  {"streams": -1}, {"streams": -1, "chunk_mb": +1}]
         if self.tune_pacing:
             moves += [{"pacing": -1}, {"pacing": +1}]
+        if self.tune_algo:
+            moves += [{"algo": +1}, {"algo": -1}]
         ok = []
         for mv in moves:
             if all(0 <= self.best_idx[k] + d < len(g[k]) for k, d in mv.items()):
@@ -261,10 +280,13 @@ class RouteTuner:
 
     def __init__(self, path, *, window: int = 5, warmup: int = 1) -> None:
         self.route = path.route
+        # tune_algo=False: hop legs are ppermute shifts, where the
+        # all-reduce algorithm knob does not apply
         self.tuners = [OnlineTuner(streams=h.streams,
                                    chunk_mb=h.comm.chunk_mb,
-                                   pacing=h.comm.pacing,
-                                   window=window, warmup=warmup)
+                                   pacing=h.comm.pacing, algo=h.comm.algo,
+                                   window=window, warmup=warmup,
+                                   tune_algo=False)
                        for h in self.route]
 
     @property
@@ -295,6 +317,8 @@ class RouteTuner:
 
 def simulate_transfer_s(nbytes: float, link: LinkSpec, *, streams: int,
                         chunk_bytes: float, pacing: float = 1.0,
+                        algo: str = "psum", world: int = 1,
+                        compress: str = "none",
                         stream_setup_s: float = 1.5e-4,
                         compute_s: float = 0.0,
                         jitter: float = 0.0, seed: int = 0) -> float:
@@ -306,7 +330,16 @@ def simulate_transfer_s(nbytes: float, link: LinkSpec, *, streams: int,
     (too-small chunks), and streams starved when the payload yields fewer
     chunks than streams (too-large chunks).  `jitter` adds deterministic
     pseudo-noise (LCG on `seed`) so tuner tests exercise the median filter.
+
+    With `world > 1` the payload is an all-reduce over `world` pods and
+    `nbytes` is replaced by the modeled per-pod wire bytes of
+    (`algo`, `compress`) — the landscape the algo knob climbs; `world=1`
+    (default) keeps the plain point-to-point transfer landscape.
     """
+    if world > 1:
+        from repro.core.ring import wire_bytes_per_pod
+        nbytes = wire_bytes_per_pod(nbytes, world, algo=algo,
+                                    compress=compress)
     chunk_bytes = max(1.0, float(chunk_bytes))
     n_chunks = max(1, math.ceil(nbytes / chunk_bytes))
     streams_used = max(1, min(int(streams), n_chunks))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compress as comp
+from repro.core import ring as rg
 from repro.core import streams as st
 from repro.core import telemetry as tel
 from repro.core.path import WidePath
@@ -35,7 +36,19 @@ def _chain(dep: jax.Array, x: jax.Array) -> jax.Array:
     return x
 
 
-def _psum_one(x: jax.Array, dim: int, axis: str, compress: str) -> jax.Array:
+def _reduce_one(x: jax.Array, dim: int, axis: str, compress: str,
+                algo: str = "psum", subgroup=None) -> jax.Array:
+    """All-reduce one chunk with the selected algorithm.
+
+    `subgroup` (site-gateway pod indices) is only *executed* by the ring
+    algorithms (the permute names only subgroup members); the psum fallback
+    reduces over the full axis and relies on the caller having masked
+    non-member contributions to zero.
+    """
+    if algo in ("ring", "ring2"):
+        return rg.ring_allreduce(x, dim, axis, compress=compress,
+                                 bidirectional=(algo == "ring2"),
+                                 subgroup=subgroup)
     if compress == "int8":
         return comp.compressed_psum(x, dim, axis)
     if compress == "bf16":
@@ -44,7 +57,7 @@ def _psum_one(x: jax.Array, dim: int, axis: str, compress: str) -> jax.Array:
 
 
 def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
-                  tel_key=None):
+                  tel_key=None, subgroup=None):
     """Chunked, streamed, paced psum of a pytree over path.axis.
 
     This is MPW_Send/Recv semantics for an all-reduce payload: the payload is
@@ -60,7 +73,17 @@ def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
     A multi-hop `path` (Forwarder route) executes with the bottleneck hop's
     knobs — the slow hop is where chunking/streams matter — but records a
     traffic plan for *every* hop, so `MPW.Report()` shows per-hop stats.
+
+    The algorithm each chunk lowers to is `path.comm.algo`: "psum" (one
+    collective per chunk; gather-based when compressed) or "ring"/"ring2"
+    (bandwidth-optimal ppermute rings, int8-requantized per hop).  `subgroup`
+    restricts the exchange to a subset of pod indices (the site-gateway
+    exchange — see :func:`site_allreduce`); wire-byte accounting is averaged
+    over the whole axis since only members carry WAN traffic.
     """
+    algo = path.comm.algo
+    if algo not in rg.ALGOS:
+        raise ValueError(f"unknown comm algo {algo!r}; have {rg.ALGOS}")
     if path.axis not in manual_axes_present(path.axis):
         return tree  # axis absent (single-pod): nothing to cross
     if site_groups is not None:
@@ -70,8 +93,16 @@ def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
     chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
     # trace-time: the plan is static per executable; record its shape once
+    world = jax.lax.axis_size(path.axis)
+    eff_world = len(subgroup) if subgroup else world
+    wire = rg.wire_bytes_per_pod(sum(c.nbytes for c in chunks), eff_world,
+                                 algo=algo, compress=path.comm.compress)
+    if subgroup:   # only members carry WAN traffic: average over the axis
+        wire *= eff_world / world
     tel.note_plan(tel_key or path.key, **st.plan_summary(
-        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
+        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing,
+        algo=algo, world=eff_world, compress=path.comm.compress,
+        wire_bytes=int(round(wire))))
     if path.hops:
         _note_hop_plans(path, leaves, dim_list)
 
@@ -89,7 +120,11 @@ def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
             for c in bucket:
                 x = st.slice_chunk(leaves[c.leaf], c)
                 x = _chain(dep, x)
-                r = _psum_one(x, c.dim, path.axis, path.comm.compress)
+                # only chunk *starts* are ordered within a stream, so the
+                # 2(P-1) ring steps of successive chunks pipeline: chunk
+                # k+1's first hop may run while chunk k's later hops drain
+                r = _reduce_one(x, c.dim, path.axis, path.comm.compress,
+                                algo, subgroup)
                 done[c.leaf].append((c, r))
                 dep = r.reshape(-1)[0].astype(jnp.float32)  # order within stream
             wave_results.append(dep)
@@ -111,21 +146,30 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
     before crossing the slow hop.
 
     `site_groups` partitions the pod-axis indices into sites (from
-    :meth:`Topology.pod_groups`).  Three stages, two collectives:
+    :meth:`Topology.pod_groups`).  Three stages:
 
       1. **intra-site reduce** — psum with `axis_index_groups`, over the fast
          LAN links (cheap; every pod at a site ends with the site-sum);
       2. **gateway mask** — only the first pod of each site keeps its value
          (the paper's Forwarder host: the one machine with WAN connectivity);
-      3. **cross-site exchange** — a chunked/streamed full-axis psum of the
-         masked values; the sum over gateways is the global sum and the psum
-         delivers it to every pod, so the exchange doubles as the in-site
-         broadcast.
+      3. **cross-site exchange** — over the gateway subgroup.  With
+         `algo="ring"`/`"ring2"` the exchange is a chunked/streamed ring
+         *among the S gateways only* (non-gateways neither send nor
+         receive), followed by an intra-site broadcast.  With `algo="psum"`
+         it is a chunked/streamed full-axis psum of gateway-masked values,
+         which doubles as the in-site broadcast — on the TPU emulation the
+         masked zeros do occupy fabric links, an artifact the ring variant
+         avoids even there.
 
     Slow-hop bytes: only S site-sums cross the WAN instead of P
     pod-contributions — the reduction a flat psum cannot express.  Per-stage
     traffic plans land under `{path.key}/intra` and `{path.key}/wan` (or the
-    route's per-hop keys when the path is multi-hop).
+    route's per-hop keys when the path is multi-hop).  The `/wan` plan
+    accounts gateway-subgroup bytes (averaged over the axis) for *both*
+    algorithms: wire bytes model the WAN deployment, where non-gateway
+    hosts have no WAN connectivity at all (the paper's Forwarder never
+    opens WAN sockets on them), so `MPW.Report()` throughput reflects what
+    the slow links carry rather than the emulation's masked-zero traffic.
     """
     groups = [list(g) for g in site_groups]
     if len({len(g) for g in groups}) > 1:
@@ -147,19 +191,37 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
                for l in leaves]
     chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
     tel.note_plan(f"{path.key}/intra", **st.plan_summary(
-        chunks, st.assign_streams(chunks, 1), 1, path.chunk_bytes, 1.0))
+        chunks, st.assign_streams(chunks, 1), 1, path.chunk_bytes, 1.0,
+        world=len(groups[0])))
+    if len(groups) == 1:
+        return jax.tree.unflatten(treedef, reduced)  # one site: no WAN hop
+
+    gateways = [g[0] for g in groups]
+    idx = jax.lax.axis_index(path.axis)
+    is_gw = jnp.any(idx == jnp.asarray(gateways, jnp.int32))
+    wan_key = None if path.hops else f"{path.key}/wan"
+
+    if path.comm.algo in ("ring", "ring2"):
+        # stage 2'/3': ring among the gateways only — no gateway mask
+        # needed (the permute never touches non-gateways), but non-gateway
+        # lanes come back holding garbage, so mask before the broadcast
+        exchanged = streamed_psum(jax.tree.unflatten(treedef, reduced), path,
+                                  dims=dim_list, tel_key=wan_key,
+                                  subgroup=gateways)
+        gw_only = [jnp.where(is_gw, l, jnp.zeros_like(l))
+                   for l in jax.tree.leaves(exchanged)]
+        bcast = [jax.lax.psum(l, path.axis, axis_index_groups=groups)
+                 for l in gw_only]
+        return jax.tree.unflatten(treedef, bcast)
 
     # stage 2: gateway mask — non-gateway pods contribute zero to the WAN
-    idx = jax.lax.axis_index(path.axis)
-    gateways = jnp.asarray([g[0] for g in groups], jnp.int32)
-    is_gw = jnp.any(idx == gateways)
     masked = [jnp.where(is_gw, l, jnp.zeros_like(l)) for l in reduced]
 
     # stage 3: cross-site exchange over the WAN path knobs; the psum of
-    # gateway-only site-sums is the global sum, delivered everywhere
-    wan_key = None if path.hops else f"{path.key}/wan"
+    # gateway-only site-sums is the global sum, delivered everywhere.
+    # `subgroup` here only scopes the wire-byte accounting to the gateways.
     return streamed_psum(jax.tree.unflatten(treedef, masked), path,
-                         dims=dim_list, tel_key=wan_key)
+                         dims=dim_list, tel_key=wan_key, subgroup=gateways)
 
 
 def _note_hop_plans(path: WidePath, leaves, dim_list) -> None:
@@ -169,7 +231,8 @@ def _note_hop_plans(path: WidePath, leaves, dim_list) -> None:
         chunks = st.plan_chunks(leaves, dim_list, hop.chunk_bytes)
         buckets = st.assign_streams(chunks, hop.streams)
         tel.note_plan(path.hop_key(i), **st.plan_summary(
-            chunks, buckets, hop.streams, hop.chunk_bytes, hop.comm.pacing))
+            chunks, buckets, hop.streams, hop.chunk_bytes, hop.comm.pacing,
+            algo="shift"))
 
 
 def flat_allreduce(tree, axes: Sequence[str]):

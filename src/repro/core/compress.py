@@ -44,20 +44,37 @@ def dequant_chunk(q: jax.Array, s: jax.Array, meta) -> jax.Array:
     return jnp.moveaxis(y, -1, dim).astype(dtype)
 
 
+def dequant_sum(qg: jax.Array, sg: jax.Array, meta) -> jax.Array:
+    """Dequantize a gathered (P, ...) int8 batch in one shot and sum over
+    the shard axis.
+
+    One dequant subgraph regardless of P: the naive per-shard Python loop
+    unrolls into P dequant subgraphs, blowing up compile time linearly in
+    pod count.  Summation is in f32 (then cast back), which also tightens
+    the reduction numerics vs. accumulating in a bf16 leaf dtype.
+    """
+    shape, dtype, dim, n, pad = meta
+    y = ops.dequant_int8(qg, sg, block=QBLOCK, dtype=jnp.float32)  # (P, ..., n+pad)
+    out = jnp.sum(y, axis=0)
+    if pad:
+        out = out[..., :n]
+    if len(shape) == 0:
+        return out.reshape(()).astype(dtype)
+    return jnp.moveaxis(out, -1, dim).astype(dtype)
+
+
 def compressed_psum(x: jax.Array, dim: int, axis: str) -> jax.Array:
     """Quantize-then-reduce all-reduce over a (manual) mesh axis.
 
-    all_gather the int8 payload + scales over `axis`, dequantize per shard,
-    sum locally.  Link bytes: n/4 vs n (f32) or n/2 (bf16) per direction.
+    all_gather the int8 payload + scales over `axis`, dequantize the whole
+    (P, ...) batch at once, sum over shards.  Link bytes: n/4 vs n (f32) or
+    n/2 (bf16) per direction — but per-pod traffic is (P-1)*n/4 (gather);
+    see :mod:`repro.core.ring` for the bandwidth-optimal ring variant.
     """
     q, s, meta = quant_chunk(x, dim)
     qg = jax.lax.all_gather(q, axis)          # (P, ...) int8
     sg = jax.lax.all_gather(s, axis)
-    P = qg.shape[0]
-    out = dequant_chunk(qg[0], sg[0], meta)
-    for p in range(1, P):
-        out = out + dequant_chunk(qg[p], sg[p], meta)
-    return out.astype(x.dtype)
+    return dequant_sum(qg, sg, meta).astype(x.dtype)
 
 
 def bf16_psum(x: jax.Array, axis: str) -> jax.Array:

@@ -58,7 +58,8 @@ def pod_shift(tree, path: WidePath, shift: int = 1, dims=None,
     chunks = st.plan_chunks(leaves, dim_list, cb)
     buckets = st.assign_streams(chunks, ns)
     tel.note_plan(tel_key or path.key,
-                  **st.plan_summary(chunks, buckets, ns, cb, pc))
+                  **st.plan_summary(chunks, buckets, ns, cb, pc,
+                                    algo="shift", world=n))
     done: dict[int, list] = {i: [] for i in range(len(leaves))}
     for bucket in buckets:
         dep = jnp.zeros((), jnp.float32)

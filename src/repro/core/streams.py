@@ -63,13 +63,26 @@ def normalize_dims(leaves: list, dims=None) -> list[Optional[int]]:
     leaves align with `leaves` (None leaves kept via is_leaf).  A leaf with no
     stated scatter dim is sliced along dim 0 — only safe when dim 0 is not
     TP-sharded, which holds for the replicated fallback leaves this covers.
+
+    Negative dims follow numpy semantics (``d % ndim``: -1 is the *last*
+    dim).  They must not be remapped to dim 0 — a stated scatter dim is a
+    promise about which dim is safe to slice, and dim 0 of the same leaf may
+    be TP-sharded.  Out-of-range dims (d >= ndim) are passed through so the
+    chunk planner fails loudly at trace time, not silently wrapped.
     """
     if dims is None:
         return [0 if l.ndim else None for l in leaves]
     dim_list = (dims if isinstance(dims, list)
                 else jax.tree.leaves(dims, is_leaf=lambda x: x is None))
-    return [d if (d is not None and d >= 0) else (0 if l.ndim else None)
-            for l, d in zip(leaves, dim_list)]
+    out: list[Optional[int]] = []
+    for l, d in zip(leaves, dim_list):
+        if d is None:
+            out.append(0 if l.ndim else None)
+        elif l.ndim == 0:
+            out.append(None)
+        else:
+            out.append(d if d >= 0 else d % l.ndim)
+    return out
 
 
 def assign_streams(chunks: list[Chunk], streams: int) -> list[list[Chunk]]:
@@ -87,20 +100,34 @@ def assign_streams(chunks: list[Chunk], streams: int) -> list[list[Chunk]]:
 
 def plan_summary(chunks: list[Chunk], buckets: list[list[Chunk]],
                  streams_configured: int, chunk_bytes: int,
-                 pacing: float = 1.0) -> dict:
+                 pacing: float = 1.0, *, algo: str = "psum", world: int = 1,
+                 compress: str = "none",
+                 wire_bytes: Optional[int] = None) -> dict:
     """Static traffic shape of a (chunks, buckets) plan, in the kwargs
     telemetry.note_plan expects.  Works on abstract leaves (shapes only), so
-    the runtime can record plans at build time without devices."""
+    the runtime can record plans at build time without devices.
+
+    `algo`/`world`/`compress` feed the modeled per-pod wire-byte count
+    (:func:`repro.core.ring.wire_bytes_per_pod`); pass `wire_bytes` to
+    override the model (e.g. gateway-subgroup accounting averaged over the
+    whole axis)."""
+    from repro.core.ring import wire_bytes_per_pod
     loads = [sum(c.nbytes for c in b) for b in buckets]
     mean = (sum(loads) / len(loads)) if loads else 0.0
+    payload = sum(c.nbytes for c in chunks)
+    if wire_bytes is None:
+        wire_bytes = int(round(wire_bytes_per_pod(
+            payload, int(world), algo=algo, compress=compress)))
     return dict(
-        payload_bytes=sum(c.nbytes for c in chunks),
+        payload_bytes=payload,
         n_chunks=len(chunks),
         streams_used=len(buckets),
         streams_configured=max(1, int(streams_configured)),
         chunk_bytes=int(chunk_bytes),
         pacing=float(pacing),
         load_balance=(max(loads) / mean) if mean > 0 else 1.0,
+        algo=str(algo),
+        wire_bytes=int(wire_bytes),
     )
 
 

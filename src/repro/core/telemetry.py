@@ -33,13 +33,15 @@ from typing import Any, Optional
 @dataclass(frozen=True)
 class PlanInfo:
     """Static shape of one transfer over a path (trace-time knowledge)."""
-    payload_bytes: int            # bytes shipped per transfer
+    payload_bytes: int            # bytes the transfer delivers (logical)
     n_chunks: int                 # chunks the payload is cut into
     streams_used: int             # non-empty stream buckets
     streams_configured: int       # path.streams (the knob)
     chunk_bytes: int              # path.chunk_bytes (the knob)
     pacing: float                 # fraction of streams in flight per wave
     load_balance: float = 1.0     # max bucket load / mean bucket load
+    algo: str = "psum"            # collective algorithm (psum|ring|ring2|shift)
+    wire_bytes: int = 0           # modeled per-pod link bytes (0 = unknown)
 
     @property
     def stream_utilization(self) -> float:
@@ -76,7 +78,12 @@ class PathTelemetry:
                step: Optional[int] = None) -> None:
         with self._lock:
             if nbytes is None:
-                nbytes = self.plan.payload_bytes if self.plan else 0
+                # prefer the modeled wire bytes when the plan knows them:
+                # achieved GB/s then measures what the link carried, not the
+                # logical payload (a site-hierarchical WAN stage carries far
+                # fewer bytes than the payload it delivers)
+                nbytes = ((self.plan.wire_bytes or self.plan.payload_bytes)
+                          if self.plan else 0)
             self.transfers += 1
             self.total_bytes += int(nbytes)
             self.total_seconds += float(seconds)
@@ -172,22 +179,24 @@ class Telemetry:
         rep = self.report()
         if not rep:
             return "(no paths recorded)"
-        rows = ["| path | transfers | bytes/xfer | streams used/conf | "
-                "chunk | window mean | achieved |",
-                "|---|---|---|---|---|---|---|"]
+        rows = ["| path | transfers | bytes/xfer | wire/pod (algo) | "
+                "streams used/conf | chunk | window mean | achieved |",
+                "|---|---|---|---|---|---|---|---|"]
         for key in sorted(rep):
             s = rep[key]
             plan = s.get("plan")
             if plan:
                 per = plan["payload_bytes"]
+                wire = (f"{_fmt_bytes(plan['wire_bytes'])} ({plan['algo']})"
+                        if plan.get("wire_bytes") else "-")
                 streams = f"{plan['streams_used']}/{plan['streams_configured']}"
                 chunk = _fmt_bytes(plan["chunk_bytes"])
             else:
                 per = s["total_bytes"] / max(s["transfers"], 1)
-                streams, chunk = "-", "-"
+                wire, streams, chunk = "-", "-", "-"
             rows.append(
-                f"| {key} | {s['transfers']} | {_fmt_bytes(per)} | {streams} "
-                f"| {chunk} | {s['window_mean_s']*1e3:.1f} ms "
+                f"| {key} | {s['transfers']} | {_fmt_bytes(per)} | {wire} "
+                f"| {streams} | {chunk} | {s['window_mean_s']*1e3:.1f} ms "
                 f"| {s['achieved_GBps']:.3f} GB/s |")
         return "\n".join(rows)
 

@@ -230,7 +230,8 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
         # cross-pod stage.  The bundle keeps the note as `replan` so a
         # trainer swapping back to a cached bundle can refresh the registry.
         replan = functools.partial(_note_path_plan, defs, dims, path,
-                                   data_size if zero else 1)
+                                   data_size if zero else 1,
+                                   int(mesh.shape.get("pod", 1)))
         replan()
 
     gather_layer, gather_top = _make_gather(defs, dims, zero, "data" in manual)
@@ -352,11 +353,14 @@ def _param_bytes(defs) -> int:
     return total
 
 
-def _note_path_plan(defs, dims, path: WidePath, shard: int) -> None:
+def _note_path_plan(defs, dims, path: WidePath, shard: int,
+                    world: int = 1) -> None:
     """Record the path's static gradient-sync plan into telemetry.
 
     Mirrors what streamed_psum will see: gradients are f32 on the wire, and
-    under ZeRO each scatterable leaf crosses pods as a 1/shard slice.
+    under ZeRO each scatterable leaf crosses pods as a 1/shard slice;
+    `world` (the pod-axis size) feeds the modeled per-pod wire bytes of the
+    configured (algo, compress).
     """
     from repro.core import streams as st
     from repro.core import telemetry as tel
@@ -373,7 +377,8 @@ def _note_path_plan(defs, dims, path: WidePath, shard: int) -> None:
     chunks = st.plan_chunks(eff_leaves, eff_dims, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
     tel.note_plan(path.key, **st.plan_summary(
-        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing))
+        chunks, buckets, path.streams, path.chunk_bytes, path.comm.pacing,
+        algo=path.comm.algo, world=world, compress=path.comm.compress))
     if path.hops:
         from repro.core.collectives import _note_hop_plans
         _note_hop_plans(path, eff_leaves, eff_dims)

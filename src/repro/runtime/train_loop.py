@@ -96,11 +96,13 @@ class Trainer:
             self.tuner = OnlineTuner(streams=p.streams,
                                      chunk_mb=p.comm.chunk_mb,
                                      pacing=p.comm.pacing,
+                                     algo=p.comm.algo,
                                      window=autotune_every)
             cfg0 = self.tuner.config()
             if (cfg0["streams"] == p.streams
                     and cfg0["chunk_mb"] == p.comm.chunk_mb
-                    and cfg0["pacing"] == p.comm.pacing):
+                    and cfg0["pacing"] == p.comm.pacing
+                    and cfg0["algo"] == p.comm.algo):
                 self._bundles[self._cfg_key(cfg0)] = self.bundle
 
     # -- state management ----------------------------------------------------
@@ -200,7 +202,8 @@ class Trainer:
     # -- online autotuning ----------------------------------------------------
     @staticmethod
     def _cfg_key(cfg: dict) -> tuple:
-        return (cfg["streams"], cfg["chunk_mb"], cfg["pacing"])
+        return (cfg["streams"], cfg["chunk_mb"], cfg["pacing"],
+                cfg.get("algo", "psum"))
 
     def _retune(self, cfg: dict, log: Callable[[str], None] = print) -> None:
         """Apply a controller-proposed path config: swap to the (cached or
@@ -225,7 +228,8 @@ class Trainer:
             self.bundle.replan()
         get_telemetry().path(self.bundle.path.key).note_retune(self.step, cfg)
         log(f"[autotune] step {self.step}: trying streams={cfg['streams']} "
-            f"chunk={cfg['chunk_mb']}MiB pacing={cfg['pacing']}")
+            f"chunk={cfg['chunk_mb']}MiB pacing={cfg['pacing']}"
+            + (f" algo={cfg['algo']}" if "algo" in cfg else ""))
 
     def _recover(self):
         if not self.manager or self.manager.latest_step() is None:

@@ -10,8 +10,8 @@ from __future__ import annotations
 import pytest
 
 from repro.core.api import MPW
-from repro.core.autotune import (CHUNK_GRID_MB, STREAM_GRID, OnlineTuner,
-                                 simulate_transfer_s)
+from repro.core.autotune import (ALGO_GRID, CHUNK_GRID_MB, STREAM_GRID,
+                                 OnlineTuner, simulate_transfer_s)
 from repro.core.path import ICI, WAN_LONDON_POZNAN, WidePath
 from repro.core.telemetry import Telemetry, get_telemetry
 
@@ -79,7 +79,9 @@ def test_tuner_keeps_single_stream_on_local_link():
 def test_tuner_mechanics():
     tuner = OnlineTuner(streams=32, chunk_mb=8.0, pacing=1.0, window=2,
                         warmup=0)
-    assert tuner.config() == {"streams": 32, "chunk_mb": 8.0, "pacing": 1.0}
+    incumbent = {"streams": 32, "chunk_mb": 8.0, "pacing": 1.0,
+                 "algo": "psum"}
+    assert tuner.config() == incumbent
     # off-grid warm starts are kept exact (inserted as grid points), so the
     # incumbent is the config actually running
     t2 = OnlineTuner(streams=33, chunk_mb=7.0, pacing=0.9)
@@ -88,8 +90,7 @@ def test_tuner_mechanics():
     # no decision before a full window
     assert tuner.observe(1.0) is None
     first = tuner.observe(1.0)         # window complete -> first probe move
-    assert first is not None and first != {"streams": 32, "chunk_mb": 8.0,
-                                           "pacing": 1.0}
+    assert first is not None and first != incumbent
     # every proposed config stays on the grids
     for _ in range(200):
         cfg = tuner.observe(1.0)
@@ -98,10 +99,10 @@ def test_tuner_mechanics():
         if cfg is not None:
             assert cfg["streams"] in STREAM_GRID
             assert cfg["chunk_mb"] in CHUNK_GRID_MB
+            assert cfg["algo"] in ALGO_GRID
     # constant cost everywhere -> nothing beats the incumbent -> revert
     assert tuner.converged
-    assert tuner.config() == tuner.best_config() == {
-        "streams": 32, "chunk_mb": 8.0, "pacing": 1.0}
+    assert tuner.config() == tuner.best_config() == incumbent
     assert tuner.observe(1.0) is None  # converged tuner stays quiet
 
 
