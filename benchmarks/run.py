@@ -24,7 +24,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,bloodflow,streams,autotune,"
-                         "multihop,ring,roofline")
+                         "multihop,ring,filetransfer,roofline")
     ap.add_argument("--dry", action="store_true",
                     help="tiny payloads / few iterations (CI smoke mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -42,6 +42,8 @@ def main():
         "autotune": ("benchmarks.autotune_convergence", "online autotune convergence"),
         "multihop": ("benchmarks.multihop_relay", "multi-hop relay & forwarder routing"),
         "ring": ("benchmarks.ring_vs_gather", "ring vs gather collectives"),
+        "filetransfer": ("benchmarks.filetransfer",
+                         "WAN file transfer (mpw-cp) over WidePath"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)

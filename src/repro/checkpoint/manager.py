@@ -1,5 +1,6 @@
 """Checkpoint manager: retention, latest-step discovery, async save,
-optional DataGather replication to a peer location."""
+optional DataGather replication to a peer location (local path or, with a
+`transfer` engine, shipped across sites over a WidePath route)."""
 from __future__ import annotations
 
 import os
@@ -10,34 +11,61 @@ from typing import Any, Optional
 from repro.checkpoint import store
 from repro.checkpoint.replicate import DataGather
 
+
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, chunk_mb: float = 32.0,
-                 streams: int = 8, replica_dir: Optional[str] = None):
+                 streams: int = 8, replica_dir: Optional[str] = None,
+                 transfer=None):
+        """`transfer` (a :class:`repro.core.filetransfer.FileTransfer`)
+        routes replication through the WAN path machinery — chunked
+        multi-stream transfers, per-hop telemetry, resumable jobs — instead
+        of the local-copy fallback; this is how `Trainer` ships checkpoints
+        to a peer site along a topology route."""
         self.dir = directory
         self.keep = keep
         self.chunk_mb = chunk_mb
         self.streams = streams
         os.makedirs(directory, exist_ok=True)
+        self.transfer = transfer
+        self.replica_dir = replica_dir
+        # the gatherer starts lazily after the first COMPLETED save: a
+        # manager whose primary directory is still empty (fresh restart, or
+        # first save in flight) must not begin mirroring — the mirror prune
+        # would wipe the very replica the restart may restore from
         self.gatherer = None
-        if replica_dir:
-            self.gatherer = DataGather(directory, replica_dir).start()
         self._async_thread: Optional[threading.Thread] = None
 
+    def _ensure_gatherer(self):
+        if self.replica_dir and self.gatherer is None:
+            self.gatherer = DataGather(self.dir, self.replica_dir,
+                                       transfer=self.transfer).start()
+
     # -- discovery -----------------------------------------------------------
-    def steps(self) -> list[int]:
+    @staticmethod
+    def _steps_in(directory: Optional[str]) -> list[int]:
         out = []
-        for d in os.listdir(self.dir):
+        if not directory or not os.path.isdir(directory):
+            return out
+        for d in os.listdir(directory):
             m = _STEP_RE.match(d)
-            if m and os.path.exists(os.path.join(self.dir, d, store.MANIFEST)):
+            if m and os.path.exists(os.path.join(directory, d, store.MANIFEST)):
                 out.append(int(m.group(1)))
         return sorted(out)
+
+    def steps(self) -> list[int]:
+        return self._steps_in(self.dir)
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def has_checkpoint(self) -> bool:
+        """Anything restorable — in the primary directory *or* the replica
+        mirror (the restart-from-replica scenario)."""
+        return bool(self.steps() or self._steps_in(self.replica_dir))
 
     def path(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}")
@@ -55,6 +83,12 @@ class CheckpointManager:
             store.save(host_state, self.path(step), step=step,
                        chunk_mb=self.chunk_mb, streams=self.streams, extra=extra)
             self._prune()
+            # start mirroring only once the primary HOLDS a published
+            # checkpoint: any earlier (top of save, __init__) and the
+            # gatherer's first prune pass races the in-flight store.save
+            # against a still-empty primary — wiping the very replica a
+            # restarted pod may still need to restore from
+            self._ensure_gatherer()
 
         # always drain a pending async save first: two writers on the same
         # step_N.tmp directory race rmtree/os.replace against each other
@@ -70,12 +104,36 @@ class CheckpointManager:
             self._async_thread.join()
             self._async_thread = None
 
+    def replicate_now(self) -> int:
+        """One synchronous mirror pass to the replica: ship the checkpoints
+        across sites *now* (the final-save path) instead of waiting for the
+        background gatherer's next tick.  Returns files shipped."""
+        return self.gatherer.sync() if self.gatherer else 0
+
     def restore(self, like, *, step: Optional[int] = None, shardings=None
                 ) -> tuple[Any, dict]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        return store.restore(self.path(step), like, shardings=shardings,
+        """Restore `step` (default: latest).  When the primary directory has
+        no usable checkpoint — the whole-pod-loss scenario DataGather exists
+        for — falls back to the replica mirror, so a pod that lost its local
+        storage restarts from the copy its peer site gathered."""
+        directory = None
+        want = step if step is not None else self.latest_step()
+        if want is not None and (step is None or want in self.steps()):
+            directory = self.path(want)
+        elif self.replica_dir:
+            rsteps = self._steps_in(self.replica_dir)
+            if step is not None and step in rsteps:
+                want = step
+            elif step is None and rsteps:
+                want = rsteps[-1]
+            if want is not None and want in rsteps:
+                directory = os.path.join(self.replica_dir, f"step_{want:08d}")
+        if directory is None:
+            raise FileNotFoundError(
+                f"no checkpoints under {self.dir}"
+                + (f" or replica {self.replica_dir}" if self.replica_dir
+                   else ""))
+        return store.restore(directory, like, shardings=shardings,
                              streams=self.streams)
 
     def _prune(self):

@@ -1,5 +1,6 @@
 """MPWide core: paths, streamed collectives, ring collectives, autotuner,
-telemetry, relay, multi-site topology/Forwarder, MPW_* API."""
+telemetry, relay, multi-site topology/Forwarder, file transfer (mpw-cp),
+MPW_* API."""
 from repro.core.api import MPW  # noqa: F401
 from repro.core.autotune import (  # noqa: F401
     OnlineTuner,
@@ -24,6 +25,14 @@ from repro.core.cycle import (  # noqa: F401
     pod_shift,
     relay,
     sendrecv,
+)
+from repro.core.filetransfer import (  # noqa: F401
+    FileJob,
+    FileResult,
+    FileTransfer,
+    file_sha256,
+    local_transfer,
+    plan_file_chunks,
 )
 from repro.core.overlap import accum_grads  # noqa: F401
 from repro.core.path import (  # noqa: F401

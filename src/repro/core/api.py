@@ -3,8 +3,10 @@
 MPWide exposes a tiny C-style API; higher-level services are asked to
 integrate it as a module.  This facade offers the same verbs over mesh-axis
 paths so coupled-application code (examples/couple_apps.py) reads like an
-MPWide program.  All calls are jit-compatible and must run inside the
-manual-DP shard_map context the runtime establishes.
+MPWide program.  Message-passing calls are jit-compatible and must run
+inside the manual-DP shard_map context the runtime establishes; the file
+verbs (FileSend/FileRecv/FileCopy/DataGather — the paper's mpw-cp tool and
+DataGather service) are host-side and run anywhere.
 
 Differences from the C++ API, by necessity of the platform:
   * buffers are pytrees of fixed-shape arrays, not char*: XLA requires
@@ -18,6 +20,7 @@ Differences from the C++ API, by necessity of the platform:
 from __future__ import annotations
 
 import itertools
+import os
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
@@ -295,3 +298,72 @@ class MPW:
     def DNSResolve(host: str) -> str:
         """Mesh-axis 'addressing': pods are coordinates, not hostnames."""
         return host
+
+    # -- file transfer (mpw-cp / DataGather; paper §"moving files") ----------
+    def _file_engine(self, pid: int):
+        # a fresh engine per call reads the path's *current* knobs, so
+        # setChunkSize / Observe-driven retunes apply to the next transfer.
+        # File timings carry no signal about the collective algorithm, so a
+        # path that ships files stops probing the algo knob (its other
+        # knobs — streams/chunk/pacing — stay shared with collectives).
+        from repro.core.filetransfer import FileTransfer
+        st = self.paths[pid]
+        if st.tuner is not None:
+            st.tuner.pin_algo()
+            # pin_algo reverts the *tuner's* state; if an algo probe was
+            # already applied to the path it must be reverted there too —
+            # future configs exclude 'algo', so nothing else would undo it
+            incumbent = st.tuner.grids["algo"][st.tuner.best_idx["algo"]]
+            if st.path.comm.algo != incumbent:
+                st.path = st.path.with_(algo=incumbent)
+        return FileTransfer(self.path(pid))
+
+    def FileSend(self, pid: int, src: str, dst: str, *, resume: bool = True):
+        """mpw-cp's send half: ship one local file along the path's route
+        (multi-hop routes store-and-forward with per-hop telemetry).
+        Chunked over the path's streams, per-chunk checksums, lossless
+        per-chunk compression when the path's `compress` knob is on, and
+        resumable via the `<dst>.mpwcp.json` sidecar.  Returns the
+        :class:`~repro.core.filetransfer.FileResult`."""
+        res = self._file_engine(pid).copy(src, dst, resume=resume,
+                                          record_total=False)
+        self.Observe(pid, res.modeled_s, nbytes=res.wire_bytes)
+        return res
+
+    def FileRecv(self, pid: int, src: str, dst: str, *, resume: bool = True):
+        """mpw-cp's receive half: pull a file along the *reverse* route
+        (the return direction of a bidirectional Forwarder path)."""
+        res = self._file_engine(pid).copy(src, dst, resume=resume,
+                                          reverse=True, record_total=False)
+        self.Observe(pid, res.modeled_s, nbytes=res.wire_bytes)
+        return res
+
+    def FileCopy(self, pid: int, src: str, dst: str, *, resume: bool = True):
+        """mpw-cp: copy a file *or a directory tree* over the path.  A
+        directory becomes a manifest walk — one FileJob per file.  Returns
+        one FileResult, or the list of per-file results for a tree."""
+        eng = self._file_engine(pid)
+        if os.path.isdir(src):
+            results = eng.copy_tree(src, dst, resume=resume,
+                                    record_total=False)
+            self.Observe(pid, sum(r.modeled_s for r in results),
+                         nbytes=sum(r.wire_bytes for r in results))
+            return results
+        res = eng.copy(src, dst, resume=resume, record_total=False)
+        self.Observe(pid, res.modeled_s, nbytes=res.wire_bytes)
+        return res
+
+    def DataGather(self, pid: int, src_dir: str, dst_dir: str, *,
+                   interval_s: float = 2.0, start: bool = True):
+        """The paper's DataGather service: continuously mirror `src_dir` to
+        `dst_dir`, shipping stale files over this path (manifest diff ->
+        FileJobs).  Returns the :class:`~repro.checkpoint.replicate.
+        DataGather` thread handle (running when `start`; call ``.stop()``
+        to drain and join)."""
+        from repro.checkpoint.replicate import DataGather as _DG
+        eng = self._file_engine(pid)
+        # the mirror discards FileResults: skip the finalize sha256 re-read
+        # (per-chunk CRCs already verify every byte)
+        eng.digest = False
+        g = _DG(src_dir, dst_dir, interval_s=interval_s, transfer=eng)
+        return g.start() if start else g

@@ -197,6 +197,21 @@ class OnlineTuner:
     def best_config(self) -> dict:
         return {k: self.grids[k][self.best_idx[k]] for k in self._active()}
 
+    def pin_algo(self) -> None:
+        """Stop probing the `algo` knob, keeping streams/chunk/pacing live.
+
+        Callers whose cost samples carry no information about the
+        collective algorithm (file transfers: algo is a no-op for file
+        bytes) must pin it — otherwise a cost-neutral algo move can look
+        like a noise-driven "improvement" and silently switch the path's
+        collective.  Any in-flight algo probe reverts to the incumbent.
+        """
+        if not self.tune_algo:
+            return
+        self.tune_algo = False
+        self.idx["algo"] = self.best_idx["algo"]
+        self._moves = [m for m in self._moves if "algo" not in m]
+
     def observe(self, seconds: float) -> Optional[dict]:
         """Feed one measured cost sample; returns knobs to apply or None."""
         if self.converged:

@@ -14,6 +14,16 @@ Modes (CommConfig.mode):
   gateway       in-pod all-reduce, cross-pod exchange performed only by the
                 data-rank-0 "front-end" group, in-pod broadcast.  The
                 user-space Forwarder, faithfully including its inefficiency.
+
+Within the cross-pod stage, each chunk's all-reduce lowers to the algorithm
+`CommConfig.algo` selects (dispatch in :func:`_reduce_one`): "psum" is one
+collective per chunk (gather-based when compressed — per-pod wire bytes
+grow linearly in pod count), "ring"/"ring2" are the bandwidth-optimal
+ppermute rings of `repro.core.ring` (int8 requantized per hop; ring2
+bidirectional).  With `site_groups` the stage goes topology-aware
+(:func:`site_allreduce`): intra-site reduction first, then only site
+gateways cross the slow hop — rings exchange over the gateway subgroup
+only, psum reduces gateway-masked values over the full axis.
 """
 from __future__ import annotations
 

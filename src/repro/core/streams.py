@@ -1,9 +1,17 @@
-"""Chunk planning: split a gradient pytree into chunk descriptors and assign
-them round-robin to streams (MPW_Send "splitted evenly over the channels").
+"""Chunk planning: split a payload into chunk descriptors and balance them
+over streams (MPW_Send "splitted evenly over the channels").
 
-Chunks are cut along each leaf's *scatter dim* (the dim that is not
-TP-sharded — the same dim ZeRO shards over "data"), so slicing never crosses
-a GSPMD-sharded dimension and costs no collective.
+Assignment is greedy longest-processing-time (LPT), not round-robin: chunks
+in descending size order each go to the currently least-loaded stream, so
+mixed-size payloads (many small leaves plus a few huge ones — or a file's
+equal chunks plus its remainder tail) keep the per-stream byte loads even;
+`plan_summary.load_balance` reports max/mean bucket load.
+
+For *array* payloads, chunks are cut along each leaf's scatter dim (the dim
+that is not TP-sharded — the same dim ZeRO shards over "data"), so slicing
+never crosses a GSPMD-sharded dimension and costs no collective.  File
+transfers reuse the same :class:`Chunk` descriptor for byte ranges
+(`repro.core.filetransfer.plan_file_chunks`).
 """
 from __future__ import annotations
 

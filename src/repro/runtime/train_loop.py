@@ -74,9 +74,10 @@ class Trainer:
         self.ckpt_every = ckpt_every
         self.fault_hook = fault_hook
         self.detector = StragglerDetector()
-        self.manager = (CheckpointManager(ckpt_dir, keep=keep,
-                                          replica_dir=replica_dir)
-                        if ckpt_dir else None)
+        self.manager = (CheckpointManager(
+            ckpt_dir, keep=keep, replica_dir=replica_dir,
+            transfer=self._ckpt_transfer(replica_dir))
+            if ckpt_dir else None)
         self.state = None
         self.step = 0
         self.history: list[dict] = []
@@ -105,6 +106,23 @@ class Trainer:
                     and cfg0["algo"] == p.comm.algo):
                 self._bundles[self._cfg_key(cfg0)] = self.bundle
 
+    def _ckpt_transfer(self, replica_dir):
+        """Checkpoint shipping engine: when this trainer spans sites (a
+        topology `route` was given), replicas travel the same multi-hop WAN
+        route the gradients do — mpw-cp chunked/compressed transfers with
+        per-hop telemetry under the ``ckpt:*`` keys — instead of a local
+        copy.  Single-site trainers keep the local mirror fallback (None)."""
+        if not replica_dir or self.route is None:
+            return None
+        from repro.core.filetransfer import FileTransfer
+        from repro.core.path import WidePath
+        path = WidePath(axis="pod", comm=self.rc.comm, name="ckpt")
+        # digest=False: the mirror loop discards FileResults, so the
+        # finalize sha256 would be a second full read of every shard for
+        # nothing (per-chunk CRCs already verify the bytes end to end)
+        return FileTransfer(path.with_hops(
+            self.route.as_hops(base_comm=self.rc.comm)), digest=False)
+
     # -- state management ----------------------------------------------------
     def _shardings(self):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
@@ -112,7 +130,7 @@ class Trainer:
                             is_leaf=lambda x: isinstance(x, P))
 
     def init_or_restore(self, seed: int = 0):
-        if self.manager and self.manager.latest_step() is not None:
+        if self.manager and self.manager.has_checkpoint():
             like = self.bundle.abstract_state()
             self.state, manifest = self.manager.restore(
                 like, shardings=self._shardings())
@@ -183,6 +201,9 @@ class Trainer:
                 self.manager.save(self.step, self.state, block=False)
         if self.manager:
             self.manager.save(self.step, self.state, block=True)
+            # ship the final checkpoint to the replica site now, not at the
+            # background gatherer's next tick (the run may be over by then)
+            self.manager.replicate_now()
         return self.history
 
     def _record_hop_samples(self, dt: float) -> None:
@@ -232,7 +253,9 @@ class Trainer:
             + (f" algo={cfg['algo']}" if "algo" in cfg else ""))
 
     def _recover(self):
-        if not self.manager or self.manager.latest_step() is None:
+        # has_checkpoint, not latest_step: mid-run recovery may also restore
+        # from the replica mirror when the primary directory is gone
+        if not self.manager or not self.manager.has_checkpoint():
             raise RuntimeError("fault with no checkpoint to restore from")
         like = self.bundle.abstract_state()
         self.state, manifest = self.manager.restore(

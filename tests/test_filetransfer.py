@@ -1,0 +1,336 @@
+"""FileTransfer (mpw-cp over WidePath): bit-exact round-trips, resume
+after interrupt without re-sending completed chunks, checksum-mismatch
+requeue, multi-hop per-hop telemetry, the MPW File* facade verbs, and the
+checkpoint restart-from-replica path."""
+from __future__ import annotations
+
+import os
+import random
+
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.core import MPW, FileTransfer, WidePath, file_sha256, get_telemetry
+from repro.core.filetransfer import (
+    PART_SUFFIX,
+    SIDECAR_SUFFIX,
+    ChecksumError,
+    plan_file_chunks,
+)
+from repro.core.path import WAN_LONDON_POZNAN
+from repro.core.topology import cosmogrid_topology
+
+
+def _make_file(path: str, nbytes: int = 300_000, seed: int = 0) -> bytes:
+    random.seed(seed)
+    data = bytes(random.getrandbits(8) for _ in range(nbytes // 2))
+    data += b"compressible " * ((nbytes - len(data)) // 13 + 1)
+    data = data[:nbytes]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(data)
+    return data
+
+
+def _path(streams: int = 4, chunk_mb: float = 0.0625,
+          compress: str = "none", name: str = "t") -> WidePath:
+    return WidePath(axis="pod", link=WAN_LONDON_POZNAN, name=name,
+                    comm=CommConfig(streams=streams, chunk_mb=chunk_mb,
+                                    compress=compress))
+
+
+# -- chunk planning -----------------------------------------------------------
+
+def test_plan_file_chunks_covers_every_byte():
+    chunks = plan_file_chunks(300_000, 1 << 16)
+    assert [c.start for c in chunks] == [0, 65536, 131072, 196608, 262144]
+    assert sum(c.nbytes for c in chunks) == 300_000
+    assert chunks[-1].size == 300_000 - 262144
+
+
+def test_plan_file_chunks_empty_file():
+    (c,) = plan_file_chunks(0, 1 << 20)
+    assert c.nbytes == 0
+
+
+# -- round trips --------------------------------------------------------------
+
+def test_roundtrip_multichunk_bit_exact(tmp_path):
+    src, dst = str(tmp_path / "a/src.bin"), str(tmp_path / "b/dst.bin")
+    _make_file(src)
+    res = FileTransfer(_path(), record=False).copy(src, dst)
+    assert res.n_chunks == 5 and res.sent == 5 and res.skipped == 0
+    assert file_sha256(dst) == file_sha256(src) == res.sha256
+    # mirror diffs compare mtime: the copy must preserve it
+    assert abs(os.path.getmtime(src) - os.path.getmtime(dst)) < 1e-6
+    # no droppings
+    assert not os.path.exists(dst + PART_SUFFIX)
+    assert not os.path.exists(dst + SIDECAR_SUFFIX)
+
+
+def test_roundtrip_empty_file(tmp_path):
+    src, dst = str(tmp_path / "e.bin"), str(tmp_path / "e.out")
+    open(src, "wb").close()
+    res = FileTransfer(_path(), record=False).copy(src, dst)
+    assert res.nbytes == 0 and os.path.getsize(dst) == 0
+
+
+def test_zlib_wire_compression_is_lossless(tmp_path):
+    src, dst = str(tmp_path / "src.bin"), str(tmp_path / "dst.bin")
+    _make_file(src)
+    res = FileTransfer(_path(compress="int8"), record=False).copy(src, dst)
+    assert res.wire_bytes < res.nbytes          # the text half compresses
+    assert file_sha256(dst) == file_sha256(src)  # and it is lossless
+
+
+def test_copy_tree_directory_manifest(tmp_path):
+    src, dst = str(tmp_path / "tree"), str(tmp_path / "mirror")
+    _make_file(os.path.join(src, "a.bin"), 70_000)
+    _make_file(os.path.join(src, "sub/b.bin"), 70_001, seed=1)
+    results = FileTransfer(_path(), record=False).copy_tree(src, dst)
+    assert len(results) == 2
+    assert file_sha256(os.path.join(dst, "sub/b.bin")) == \
+        file_sha256(os.path.join(src, "sub/b.bin"))
+
+
+# -- resume -------------------------------------------------------------------
+
+class _Interrupt(RuntimeError):
+    pass
+
+
+def test_resume_after_interrupt_skips_completed_chunks(tmp_path):
+    src, dst = str(tmp_path / "src.bin"), str(tmp_path / "dst.bin")
+    _make_file(src)
+    n_before_stop = 3
+    seen: list[int] = []
+
+    def interrupter(chunk, hop, payload):
+        if len(seen) >= n_before_stop and chunk.leaf not in seen:
+            raise _Interrupt()
+        seen.append(chunk.leaf)
+        return payload
+
+    # streams=1: one ordered bucket, so exactly 3 chunks complete
+    eng = FileTransfer(_path(streams=1), record=False,
+                       fault_hook=interrupter)
+    with pytest.raises(_Interrupt):
+        eng.copy(src, dst)
+    assert os.path.exists(dst + PART_SUFFIX)     # partial survives
+    assert os.path.exists(dst + SIDECAR_SUFFIX)  # with its manifest
+
+    eng.fault_hook = None
+    res = eng.copy(src, dst)                     # resume
+    assert res.skipped == n_before_stop          # nothing re-sent
+    assert res.sent == res.n_chunks - n_before_stop
+    assert file_sha256(dst) == file_sha256(src)
+    assert not os.path.exists(dst + SIDECAR_SUFFIX)  # cleaned on completion
+
+
+def test_resume_restarts_when_source_changed(tmp_path):
+    src, dst = str(tmp_path / "src.bin"), str(tmp_path / "dst.bin")
+    _make_file(src)
+    seen: list[int] = []
+
+    def interrupter(chunk, hop, payload):
+        if len(seen) >= 2 and chunk.leaf not in seen:
+            raise _Interrupt()
+        seen.append(chunk.leaf)
+        return payload
+
+    eng = FileTransfer(_path(streams=1), record=False,
+                       fault_hook=interrupter)
+    with pytest.raises(_Interrupt):
+        eng.copy(src, dst)
+
+    _make_file(src, seed=99)                     # new bytes, new mtime
+    eng.fault_hook = None
+    res = eng.copy(src, dst)
+    assert res.skipped == 0                      # stale sidecar discarded
+    assert file_sha256(dst) == file_sha256(src)
+
+
+# -- checksums ----------------------------------------------------------------
+
+def test_checksum_mismatch_requeues_chunk(tmp_path):
+    src, dst = str(tmp_path / "src.bin"), str(tmp_path / "dst.bin")
+    _make_file(src)
+    corrupted: list[int] = []
+
+    def corrupt_once(chunk, hop, payload):
+        if chunk.leaf == 2 and not corrupted:    # flip bytes on first pass
+            corrupted.append(chunk.leaf)
+            return b"\xff" + payload[1:]
+        return payload
+
+    res = FileTransfer(_path(), record=False,
+                       fault_hook=corrupt_once).copy(src, dst)
+    assert res.retries == 1                      # requeued exactly once
+    assert file_sha256(dst) == file_sha256(src)  # and healed
+
+
+def test_checksum_failure_exhausts_retries(tmp_path):
+    src, dst = str(tmp_path / "src.bin"), str(tmp_path / "dst.bin")
+    _make_file(src)
+
+    def always_corrupt(chunk, hop, payload):
+        return b"\x00" * len(payload) if chunk.leaf == 0 else payload
+
+    eng = FileTransfer(_path(), record=False, max_retries=2,
+                       fault_hook=always_corrupt)
+    with pytest.raises(ChecksumError):
+        eng.copy(src, dst)
+
+
+# -- multi-hop / facade -------------------------------------------------------
+
+def test_filecopy_two_hop_roundtrip_resume_and_per_hop_report(tmp_path):
+    """The PR acceptance path: a multi-chunk FileCopy over a 2-hop route
+    round-trips bit-exact, resumes without re-sending completed chunks, and
+    MPW.Report shows per-hop wire bytes for the transfer."""
+    src, dst = str(tmp_path / "src.bin"), str(tmp_path / "dst.bin")
+    _make_file(src)
+    topo = cosmogrid_topology()
+    mpw = MPW.Init()
+    pid = mpw.CreateForwarder(topo, "tokyo", "espoo")   # no direct link
+    mpw.setChunkSize(pid, 1 << 16)                      # multi-chunk
+    path = mpw.path(pid)
+    assert path.n_hops == 2
+
+    res = mpw.FileCopy(pid, src, dst)
+    assert res.n_chunks == 5
+    assert file_sha256(dst) == file_sha256(src)         # bit-exact
+
+    # per-hop wire bytes are visible in the report
+    report = mpw.Report()
+    for i in range(path.n_hops):
+        hop = report[path.hop_key(i)]
+        assert hop["total_bytes"] == res.hop_wire_bytes[i] > 0
+        assert hop["plan"]["wire_bytes"] == res.hop_wire_bytes[i]
+    assert "hops" in mpw.PathStats(pid)
+
+    # interrupt a second transfer mid-flight, then resume through the verb
+    seen: list[int] = []
+
+    def interrupter(chunk, hop, payload):
+        if len(seen) >= 2 and chunk.leaf not in seen:
+            raise _Interrupt()
+        if hop == 1:                                   # counted at final hop
+            seen.append(chunk.leaf)
+        return payload
+
+    eng = FileTransfer(path.with_(streams=1), fault_hook=interrupter,
+                       record=False)
+    dst2 = str(tmp_path / "dst2.bin")
+    with pytest.raises(_Interrupt):
+        eng.copy(src, dst2)
+    eng.fault_hook = None
+    resumed = eng.copy(src, dst2)
+    assert resumed.skipped == 2 and resumed.sent == 3   # no chunk re-sent
+    assert file_sha256(dst2) == file_sha256(src)
+    mpw.Finalize()
+
+
+def test_filesend_filerecv_directions(tmp_path):
+    src = str(tmp_path / "src.bin")
+    _make_file(src, 70_000)
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(nstreams=2, comm=CommConfig(streams=2,
+                                                     chunk_mb=0.0625))
+    out = mpw.FileSend(pid, src, str(tmp_path / "sent.bin"))
+    back = mpw.FileRecv(pid, str(tmp_path / "sent.bin"),
+                        str(tmp_path / "back.bin"))
+    assert out.sha256 == back.sha256 == file_sha256(src)
+    mpw.Finalize()
+
+
+def test_file_transfers_feed_the_online_tuner(tmp_path):
+    """File transfers tune with the same knobs as collectives: Observe
+    (called by the File* verbs) advances the path's OnlineTuner."""
+    src = str(tmp_path / "src.bin")
+    _make_file(src, 150_000)
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(comm=CommConfig(streams=1, chunk_mb=0.0625))
+    mpw.setAutoTuning(pid, True, online=True, window=1)
+    tuner = mpw.paths[pid].tuner
+    assert tuner is not None
+    for i in range(4):
+        mpw.FileCopy(pid, src, str(tmp_path / f"d{i}.bin"))
+    assert tuner.history                       # controller digested samples
+    assert get_telemetry().path(mpw.path(pid).key).transfers >= 4
+    # file timings carry no algo signal: the first file verb pins the algo
+    # knob so noise cannot silently switch the path's collective algorithm
+    assert tuner.tune_algo is False
+    assert all("algo" not in cfg for cfg, _ in tuner.history)
+    mpw.Finalize()
+
+
+def test_file_verbs_revert_applied_algo_probe(tmp_path):
+    """If an algo probe was already APPLIED to the path when the first file
+    verb arrives, pinning must also revert the path — post-pin configs
+    exclude 'algo', so nothing else would ever undo the probe."""
+    src = str(tmp_path / "src.bin")
+    _make_file(src, 70_000)
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(comm=CommConfig(streams=1, chunk_mb=0.0625))
+    mpw.setAutoTuning(pid, True, online=True, window=1)  # incumbent: psum
+    # simulate Observe having applied an algo probe to the path
+    mpw.paths[pid].path = mpw.path(pid).with_(algo="ring2")
+    mpw.FileCopy(pid, src, str(tmp_path / "d.bin"))
+    assert mpw.path(pid).comm.algo == "psum"    # reverted to the incumbent
+    mpw.Finalize()
+
+
+def test_datagather_verb_mirrors_and_prunes(tmp_path):
+    src, dst = str(tmp_path / "data"), str(tmp_path / "mirror")
+    _make_file(os.path.join(src, "keep.bin"), 70_000)
+    _make_file(os.path.join(src, "old/drop.bin"), 70_000)
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(comm=CommConfig(streams=2, chunk_mb=0.0625))
+    g = mpw.DataGather(pid, src, dst, start=False)
+    assert g.transfer.digest is False   # mirror discards results: no
+    assert g.sync() == 2                # second full read per file
+    import shutil
+    shutil.rmtree(os.path.join(src, "old"))
+    g.sync()
+    assert not os.path.exists(os.path.join(dst, "old"))
+    assert os.path.isfile(os.path.join(dst, "keep.bin"))
+    mpw.Finalize()
+
+
+# -- checkpoint restart-from-replica ------------------------------------------
+
+def test_manager_restores_from_replica_after_primary_loss(tmp_path):
+    """Whole-pod loss: the primary checkpoint dir is gone, the DataGather
+    replica (shipped over a WidePath) is what the restart restores from."""
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager, store
+
+    primary, replica = str(tmp_path / "ckpt"), str(tmp_path / "replica")
+    state = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+             "b": np.ones(3, dtype=np.float32)}
+    mgr = CheckpointManager(primary, replica_dir=replica)
+    mgr.save(10, state)
+    # replicate_now serializes against the background gatherer (which may
+    # already have mirrored everything on start): after it returns, the
+    # mirror is current either way
+    mgr.replicate_now()
+    assert os.path.isdir(os.path.join(replica, "step_00000010"))
+    mgr.close()
+
+    import shutil
+    shutil.rmtree(primary)                      # the pod's storage is gone
+    mgr2 = CheckpointManager(primary, replica_dir=replica)
+    assert mgr2.latest_step() is None           # primary really is empty
+    assert mgr2.has_checkpoint()                # but the replica is not
+    like = {"w": np.zeros((3, 4), np.float32), "b": np.zeros(3, np.float32)}
+    restored, manifest = mgr2.restore(like)
+    assert manifest["step"] == 10
+    np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+    mgr2.close()
+    # replica checkpoints carry no transfer droppings
+    step_dir = os.path.join(replica, "step_00000010")
+    assert os.path.exists(os.path.join(step_dir, store.MANIFEST))
+    assert not [f for f in os.listdir(step_dir)
+                if f.endswith((PART_SUFFIX, SIDECAR_SUFFIX))]

@@ -1,9 +1,11 @@
 """DataGather sync_once: mirror exactness (orphan files AND directories are
-pruned) and tolerance to files deleted from src concurrently with the walk —
-the checkpoint GC races the mirror thread in production."""
+pruned), tolerance to files deleted from src concurrently with the walk —
+the checkpoint GC races the mirror thread in production — same-size rewrite
+detection by mtime, and the WAN transfer-engine data plane."""
 from __future__ import annotations
 
 import os
+import time
 
 from repro.checkpoint.replicate import sync_once
 
@@ -78,3 +80,89 @@ def test_concurrent_deletion_mid_walk(tmp_path, monkeypatch):
     monkeypatch.undo()
     sync_once(src, dst)
     assert not os.path.exists(os.path.join(dst, "vanishing.bin"))
+
+
+def test_staging_tmp_directories_not_mirrored(tmp_path):
+    """store.save stages whole checkpoints in `step_N.tmp/` dirs before its
+    atomic rename: the mirror must not descend into them (that would ship
+    partial shards, then ship the published copy again)."""
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "step_10", "shard0.bin"))
+    _write(os.path.join(src, "step_20.tmp", "shard0.bin"))   # mid-write
+    assert sync_once(src, dst) == 1
+    assert os.path.isfile(os.path.join(dst, "step_10", "shard0.bin"))
+    assert not os.path.exists(os.path.join(dst, "step_20.tmp"))
+
+
+def test_same_size_newer_mtime_overwrites(tmp_path):
+    """Checkpoint files are fixed-shape: a rewrite has the same size but new
+    bytes.  The mirror diff must ship on mtime alone."""
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "shard.bin"), "aaaa")
+    assert sync_once(src, dst) == 1
+
+    time.sleep(0.01)                     # ensure a strictly newer mtime
+    _write(os.path.join(src, "shard.bin"), "bbbb")   # same size, new bytes
+    assert sync_once(src, dst) == 1
+    with open(os.path.join(dst, "shard.bin")) as f:
+        assert f.read() == "bbbb"
+    # and an untouched pass copies nothing (mtime was preserved on copy)
+    assert sync_once(src, dst) == 0
+
+
+def test_prune_removes_orphaned_engine_droppings(tmp_path):
+    """A mirror pass killed mid-copy can leave a full-size .part (and its
+    sidecar) in the replica; the next pass's prune must remove them, or the
+    replica grows without bound across interruptions."""
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "f.bin"), "fresh")
+    sync_once(src, dst)
+    _write(os.path.join(dst, "f.bin.part"), "x" * 1000)      # orphans
+    _write(os.path.join(dst, "f.bin.mpwcp.json"), "{}")
+    _write(os.path.join(dst, "gone.bin.part"), "x" * 1000)
+    sync_once(src, dst)
+    leftover = [f for _, _, fs in os.walk(dst) for f in fs]
+    assert leftover == ["f.bin"]
+
+
+def test_mirror_thread_survives_checksum_failure(tmp_path):
+    """A chunk exhausting its CRC retries raises ChecksumError out of
+    sync(); the background loop and the stop() drain must survive it (the
+    old OSError-only guard let it kill the mirror thread silently)."""
+    from repro.checkpoint.replicate import DataGather
+    from repro.core import FileTransfer
+    from repro.core.path import local_path
+
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "f.bin"), "payload")
+    bad = FileTransfer(local_path(), record=False, max_retries=0,
+                       fault_hook=lambda c, h, p: b"\x00" * len(p))
+    g = DataGather(src, dst, interval_s=0.01, transfer=bad).start()
+    time.sleep(0.1)
+    assert g._thread.is_alive()          # failures did not kill the loop
+    g.stop()                             # drain must not raise either
+    assert not os.path.exists(os.path.join(dst, "f.bin"))
+
+    g2 = DataGather(src, dst)            # healthy plane still mirrors
+    assert g2.sync() == 1
+    """The mirror's data plane is the mpw-cp engine: a WAN-configured
+    FileTransfer (multi-stream, compressed) produces the same mirror and
+    leaves no .part/.mpwcp.json droppings for later passes to mis-copy."""
+    from repro.configs.base import CommConfig
+    from repro.core import FileTransfer, WidePath
+    from repro.core.path import WAN_LONDON_POZNAN
+
+    src, dst = str(tmp_path / "src"), str(tmp_path / "dst")
+    _write(os.path.join(src, "step_10", "shard0.bin"), "x" * 200_000)
+    _write(os.path.join(src, "step_10", "meta.json"), "{}")
+    eng = FileTransfer(WidePath(axis="pod", link=WAN_LONDON_POZNAN,
+                                name="mirror-test",
+                                comm=CommConfig(streams=4, chunk_mb=0.0625,
+                                                compress="int8")))
+    assert sync_once(src, dst, transfer=eng) == 2
+    with open(os.path.join(dst, "step_10", "shard0.bin")) as f:
+        assert f.read() == "x" * 200_000
+    assert sync_once(src, dst, transfer=eng) == 0    # already mirrored
+    names = [f for _, _, fs in os.walk(dst) for f in fs]
+    assert all(not n.endswith((".part", ".mpwcp.json", ".tmp"))
+               for n in names)
