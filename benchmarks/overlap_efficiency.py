@@ -1,0 +1,174 @@
+"""Bucketed backward overlap: exposed WAN seconds vs accumulate-then-sync.
+
+The paper's headline trick is latency hiding (the bloodflow coupling leaves
+6 ms of an 11 ms RTT exchange exposed).  `benchmarks/overlap_bloodflow.py`
+shows the microbatch-pipelined version, which needs `microbatches > 1` and
+still exposes one *whole-tree* sync.  This section quantifies what the
+layer-bucketed scheduler (`repro/core/buckets.py`) buys:
+
+  (a) MODELED — sweep `microbatches x bucket_mb` on the window-capped
+      London-Poznan link: per-bucket transfers flush during the backward
+      window and the optimizer consumes the tail bucket-by-bucket.
+      Acceptance (asserted):
+        * at m=1, bucketed overlap exposes <= 1/4 of accumulate-then-sync's
+          modeled comm seconds;
+        * exposure shrinks monotonically as bucket_mb decreases, until the
+          per-bucket latency floor.
+  (b) MEASURED — a real bucketed train step on fake CPU devices (2x2x2
+      mesh): per-bucket `bkt{i}` telemetry + nonzero `overlapped_s` in
+      `MPW.Report()` (asserted), relative step time vs unbucketed.
+
+`benchmarks/run.py --json` exports RESULTS for the cross-PR perf gate.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import run_multidev
+from repro.core.autotune import simulate_transfer_s, tune
+from repro.core.overlap import modeled_exposure
+from repro.core.path import WAN_LONDON_POZNAN
+
+RESULTS: dict = {}
+
+LINK = WAN_LONDON_POZNAN
+BUCKET_SWEEP_MB = (0.0, 64.0, 32.0, 16.0, 8.0, 4.0, 1.0, 0.25)
+
+
+def _dry() -> bool:
+    return os.environ.get("WIDEJAX_BENCH_DRY") == "1"
+
+
+def modeled() -> str:
+    payload = (32 << 20) if _dry() else (256 << 20)
+    world = 4
+    t = tune(payload, LINK, world=world)
+    knobs = dict(streams=t.streams, chunk_bytes=t.chunk_bytes, world=world)
+    base_t = simulate_transfer_s(payload, LINK, streams=t.streams,
+                                 chunk_bytes=t.chunk_bytes, world=world)
+    # compute/comm ratio 1.5: the CosmoGrid regime — enough local work per
+    # step to hide the WAN sync, if the scheduler can get it in flight
+    window = 1.5 * base_t
+
+    rows = ["| microbatches | bucket_mb | n_buckets | comm s | exposed s | "
+            "overlap eff |", "|---|---|---|---|---|---|"]
+    # keyed by parameters (not list position) so the CI perf gate compares
+    # like with like even when the sweep grid changes across PRs
+    RESULTS["modeled"] = {}
+    sweep: dict[int, list] = {}
+    for m in (1, 2, 4):
+        sweep[m] = []
+        for bmb in BUCKET_SWEEP_MB:
+            r = modeled_exposure(payload, LINK, pacing=1.0,
+                                 compute_window=window,
+                                 bucket_bytes=int(bmb * (1 << 20)),
+                                 microbatches=m, **knobs)
+            eff = r["overlapped_s"] / r["comm_s"] if r["comm_s"] else 0.0
+            rows.append(f"| {m} | {bmb:g} | {r['n_buckets']} "
+                        f"| {r['comm_s']:.2f} | {r['exposed_s']:.3f} "
+                        f"| {eff*100:.0f}% |")
+            sweep[m].append((bmb, r["exposed_s"]))
+            RESULTS["modeled"][f"m{m}_bucket{bmb:g}"] = dict(
+                n_buckets=r["n_buckets"], comm_s=r["comm_s"],
+                exposed_s=r["exposed_s"], overlap_efficiency=eff)
+
+    # acceptance 1: at m=1 accumulate-then-sync exposes its whole comm time;
+    # bucketed overlap must expose <= 1/4 of it
+    base = dict(sweep[1])[0.0]
+    best_exposed = min(e for b, e in sweep[1] if b > 0)
+    assert best_exposed <= base / 4, (
+        f"bucketed m=1 exposure {best_exposed:.3f}s not <= 1/4 of "
+        f"accumulate-then-sync {base:.3f}s")
+
+    # acceptance 2: exposure shrinks monotonically as bucket_mb decreases,
+    # until the per-bucket latency floor (after which overheads win)
+    curve = [e for b, e in sweep[1] if b > 0]          # descending bucket_mb
+    floor = curve.index(min(curve))
+    for a, b in zip(curve[:floor], curve[1:floor + 1]):
+        assert b <= a * 1.001, f"exposure not monotone before floor: {curve}"
+
+    RESULTS["m1"] = dict(base_exposed_s=base, bucketed_exposed_s=best_exposed,
+                         exposure_speedup=base / max(best_exposed, 1e-12))
+    rows += ["", f"m=1: accumulate-then-sync exposes {base:.2f}s; bucketed "
+             f"floor {best_exposed:.3f}s — **{base/best_exposed:.0f}x less "
+             f"exposed WAN time** ({RESULTS['m1']['exposure_speedup']:.0f}x "
+             "speedup of the exposed fraction)."]
+    return "\n".join(rows)
+
+
+_MEASURE = r"""
+import json, os, time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, smoke_config, RunConfig, ShapeConfig, CommConfig, TrainConfig
+from repro.runtime.step import build_train_step
+from repro.models.registry import batch_concrete
+
+steps = 1 if os.environ.get("WIDEJAX_BENCH_DRY") == "1" else 3
+cfg = smoke_config(get_config("qwen1.5-0.5b"))
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+out = {}
+for label, bucket_mb in [("unbucketed", 0.0), ("bucketed", 0.05)]:
+    rc = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+                   comm=CommConfig(mode="hierarchical", streams=4,
+                                   chunk_mb=0.01, bucket_mb=bucket_mb,
+                                   autotune=False),
+                   train=TrainConfig(zero1=True, microbatches=1))
+    with jax.set_mesh(mesh):
+        b = build_train_step(rc, mesh)
+        state = jax.device_put(b.init_state(0), jax.tree.map(
+            lambda s: NamedSharding(mesh, s), b.state_specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        batch = jax.device_put(batch_concrete(cfg, "train", 8, 32),
+                               jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                            b.batch_specs,
+                                            is_leaf=lambda x: isinstance(x, P)))
+        state, m = b.fn(state, batch); jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = b.fn(state, batch)
+        jax.block_until_ready(m["loss"])
+        out[label] = {"step_s": (time.perf_counter() - t0) / steps,
+                      "loss": float(m["loss"]),
+                      "n_buckets": len(b.bucket_plan.buckets) if b.bucket_plan else 0}
+
+from repro.core.telemetry import get_telemetry
+rep = get_telemetry().report()
+out["bkt_keys"] = sorted(k for k in rep if k.startswith("train:interpod/bkt"))
+s = rep["train:interpod"]
+out["exposed_s"] = s.get("exposed_s", 0.0)
+out["overlapped_s"] = s.get("overlapped_s", 0.0)
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def run() -> str:
+    parts = ["## Bucketed backward overlap — exposed WAN time vs "
+             "accumulate-then-sync", "",
+             "### Modeled (London-Poznan window-capped link)", "",
+             modeled(), ""]
+    res = run_multidev(_MEASURE, timeout=900)
+    assert res["bkt_keys"], "bucketed step recorded no per-bucket telemetry"
+    assert res["overlapped_s"] > 0, (
+        "train path must report nonzero overlapped_s")
+    assert abs(res["unbucketed"]["loss"] - res["bucketed"]["loss"]) < 1e-4
+    RESULTS["measured"] = res
+    parts += [
+        "### Measured (bucketed train step, fake CPU devices)", "",
+        "| config | buckets | step time | loss |", "|---|---|---|---|",
+        f"| unbucketed | - | {res['unbucketed']['step_s']*1e3:.0f} ms "
+        f"| {res['unbucketed']['loss']:.4f} |",
+        f"| bucketed (flush+tail) | {res['bucketed']['n_buckets']} "
+        f"| {res['bucketed']['step_s']*1e3:.0f} ms "
+        f"| {res['bucketed']['loss']:.4f} |", "",
+        f"Per-bucket telemetry keys: `{'`, `'.join(res['bkt_keys'])}`; "
+        f"train path models {res['overlapped_s']*1e3:.2f} ms overlapped vs "
+        f"{res['exposed_s']*1e3:.2f} ms exposed.  (CPU emulation validates "
+        "plumbing and numerics; the WAN-regime win is the modeled table.)",
+        ""]
+    return "\n".join(parts)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,87 @@
+"""Cross-PR perf-regression gate over ``benchmarks/run.py --json`` files.
+
+Usage::
+
+    python -m benchmarks.perf_gate BASELINE.json NEW.json [--threshold 0.10]
+
+Walks each section's ``RESULTS`` export in both files and compares every
+numeric value whose key names a higher-is-better performance figure
+(``*GBps*``, ``*throughput*``, ``*speedup*``, ``*efficiency*``).  Exits 1
+if any figure regressed more than ``threshold`` (default 10%) against the
+committed baseline.  Keys or sections present in only one file are skipped
+— new benchmarks never fail the gate, and a section that *errored* in the
+new run already fails ``run.py`` itself.
+
+The committed baseline is ``BENCH_overlap.json`` (regenerate with
+``PYTHONPATH=src python -m benchmarks.run --dry --json BENCH_overlap.json``
+after an intentional perf change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+HIGHER_IS_BETTER = re.compile(r"gbps|throughput|speedup|efficiency", re.I)
+
+
+def _walk(node, path=()):
+    """Yield (path tuple, numeric leaf) pairs."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk(v, path + (str(k),))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk(v, path + (str(i),))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield path, float(node)
+
+
+def compare(baseline: dict, new: dict, threshold: float) -> list[str]:
+    """Regression messages (empty = gate passes)."""
+    base_results = {p: v for p, v in _walk(baseline.get("sections", {}))
+                    if "results" in p and HIGHER_IS_BETTER.search(p[-1])}
+    new_results = dict(_walk(new.get("sections", {})))
+    failures = []
+    for path, base_v in sorted(base_results.items()):
+        if path not in new_results or base_v <= 0:
+            continue
+        new_v = new_results[path]
+        if new_v < base_v * (1.0 - threshold):
+            failures.append(
+                f"{'/'.join(path)}: {new_v:.4g} vs baseline {base_v:.4g} "
+                f"({(1 - new_v / base_v) * 100:.1f}% regression)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    if bool(baseline.get("dry")) != bool(new.get("dry")):
+        print("perf_gate: baseline and new run disagree on --dry; "
+              "refusing to compare apples to oranges")
+        return 1
+    failures = compare(baseline, new, args.threshold)
+    n_compared = len([p for p, _ in _walk(baseline.get("sections", {}))
+                      if "results" in p and HIGHER_IS_BETTER.search(p[-1])])
+    if failures:
+        print(f"perf_gate: {len(failures)} modeled-throughput regression(s) "
+              f"> {args.threshold*100:.0f}%:")
+        for msg in failures:
+            print("  " + msg)
+        return 1
+    print(f"perf_gate: OK ({n_compared} figures within "
+          f"{args.threshold*100:.0f}% of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

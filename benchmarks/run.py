@@ -23,8 +23,8 @@ import traceback
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig1,bloodflow,streams,autotune,"
-                         "multihop,ring,filetransfer,roofline")
+                    help="comma list: table1,fig1,bloodflow,overlap,streams,"
+                         "autotune,multihop,ring,filetransfer,roofline")
     ap.add_argument("--dry", action="store_true",
                     help="tiny payloads / few iterations (CI smoke mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -38,6 +38,8 @@ def main():
         "table1": ("benchmarks.table1_throughput", "Table 1 WAN throughput"),
         "fig1": ("benchmarks.fig1_steptime", "Fig 1 distributed overhead"),
         "bloodflow": ("benchmarks.overlap_bloodflow", "bloodflow latency hiding"),
+        "overlap": ("benchmarks.overlap_efficiency",
+                    "bucketed backward overlap efficiency"),
         "streams": ("benchmarks.streams_sweep", "streams sweep"),
         "autotune": ("benchmarks.autotune_convergence", "online autotune convergence"),
         "multihop": ("benchmarks.multihop_relay", "multi-hop relay & forwarder routing"),

@@ -186,6 +186,13 @@ class CommConfig:
     # ppermute rings with per-step requantization (ring2: bidirectional,
     # half the latency-step depth) — see repro/core/ring.py
     algo: str = "psum"           # psum | ring | ring2
+    # gradient-sync bucket size (beyond-paper latency hiding): > 0 splits
+    # the gradient tree into ~bucket_mb buckets along the stacked `layers`
+    # dim so each bucket's cross-pod sync can flush during backprop and the
+    # exposed tail is consumed bucket-by-bucket interleaved with the
+    # optimizer — see repro/core/buckets.py.  0 disables bucketing (one
+    # whole-tree sync, the pre-bucketing behaviour).
+    bucket_mb: float = 0.0
 
 
 @dataclass(frozen=True)

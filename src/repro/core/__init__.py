@@ -10,6 +10,12 @@ from repro.core.autotune import (  # noqa: F401
     simulate_transfer_s,
     tune,
 )
+from repro.core.buckets import (  # noqa: F401
+    Bucket,
+    BucketPlan,
+    bucketed_sync,
+    plan_buckets,
+)
 from repro.core.collectives import (  # noqa: F401
     flat_allreduce,
     gateway_allreduce,

@@ -142,6 +142,17 @@ class MPW:
             raise ValueError(f"unknown algo {algo!r}; have {ALGOS}")
         self.paths[pid].path = self.paths[pid].path.with_(algo=algo)
 
+    def setBucketSize(self, pid: int, nbytes: int) -> None:
+        """Select the gradient-sync bucket size (beyond the C API): > 0
+        splits all-reduce payloads into ~nbytes buckets along the stacked
+        `layers` dim so transfers flush during backprop and the exposed
+        tail is consumed bucket-by-bucket (repro/core/buckets.py); 0
+        restores one whole-tree sync."""
+        if nbytes < 0:
+            raise ValueError(f"bucket size must be >= 0, got {nbytes}")
+        self.paths[pid].path = self.paths[pid].path.with_(
+            bucket_mb=nbytes / (1 << 20))
+
     def setWin(self, pid: int, nbytes: int) -> None:
         # TCP window -> chunk payload sizing against the link BDP
         self.setChunkSize(pid, nbytes)
@@ -172,7 +183,9 @@ class MPW:
                 st.tuner = OnlineTuner(streams=p.streams,
                                        chunk_mb=p.comm.chunk_mb,
                                        pacing=p.comm.pacing,
-                                       algo=p.comm.algo, window=window)
+                                       algo=p.comm.algo,
+                                       bucket_mb=p.comm.bucket_mb,
+                                       window=window)
 
     def Observe(self, pid: int, seconds: float,
                 nbytes: Optional[int] = None,
@@ -303,19 +316,24 @@ class MPW:
     def _file_engine(self, pid: int):
         # a fresh engine per call reads the path's *current* knobs, so
         # setChunkSize / Observe-driven retunes apply to the next transfer.
-        # File timings carry no signal about the collective algorithm, so a
-        # path that ships files stops probing the algo knob (its other
-        # knobs — streams/chunk/pacing — stay shared with collectives).
+        # File timings carry no signal about the collective algorithm or
+        # the gradient-sync bucket size, so a path that ships files stops
+        # probing those knobs (its other knobs — streams/chunk/pacing —
+        # stay shared with collectives).
         from repro.core.filetransfer import FileTransfer
         st = self.paths[pid]
         if st.tuner is not None:
             st.tuner.pin_algo()
-            # pin_algo reverts the *tuner's* state; if an algo probe was
-            # already applied to the path it must be reverted there too —
-            # future configs exclude 'algo', so nothing else would undo it
+            st.tuner.pin_bucket()
+            # pinning reverts the *tuner's* state; if a probe was already
+            # applied to the path it must be reverted there too — future
+            # configs exclude the pinned knob, so nothing else would undo it
             incumbent = st.tuner.grids["algo"][st.tuner.best_idx["algo"]]
             if st.path.comm.algo != incumbent:
                 st.path = st.path.with_(algo=incumbent)
+            bucket = st.tuner.grids["bucket_mb"][st.tuner.best_idx["bucket_mb"]]
+            if st.path.comm.bucket_mb != bucket:
+                st.path = st.path.with_(bucket_mb=bucket)
         return FileTransfer(self.path(pid))
 
     def FileSend(self, pid: int, src: str, dst: str, *, resume: bool = True):

@@ -107,6 +107,10 @@ CHUNK_GRID_MB: tuple[float, ...] = (0.0625, 0.25, 1.0, 2.0, 4.0, 8.0,
                                     16.0, 32.0, 64.0)
 PACING_GRID: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
 ALGO_GRID: tuple[str, ...] = ("psum", "ring", "ring2")
+# gradient-sync bucket size (0 = bucketing off, one whole-tree sync); the
+# grid spans "one bucket per layer block" up to "a handful of buckets for
+# the largest trees" — see repro/core/buckets.py
+BUCKET_GRID_MB: tuple[float, ...] = (0.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
 
 
 def _seed(grid: list, value) -> int:
@@ -146,37 +150,52 @@ class OnlineTuner:
     any other knob.  `tune_algo=False` pins it (per-hop RouteTuner legs are
     ppermute shifts, where the all-reduce algorithm does not apply).
 
+    The sync *bucket size* (`CommConfig.bucket_mb`, `repro.core.buckets`) is
+    a fifth knob: smaller buckets hide more of the transfer behind backprop
+    and the optimizer but pay more per-transfer overhead, and the optimum
+    depends on the measured compute/comm balance — exactly the trade the
+    hill climb is built for.  Probing up from the 0.0 grid point is how a
+    path *discovers* that bucketed overlap pays.  `tune_bucket=False` pins
+    it (file transfers and per-hop shift legs carry no bucket signal).
+
     `observe` returns the new knob dict to apply when the tuner wants a
     config change, else None.  The tuner never raises mid-training: any cost
     signal is accepted, convergence just stops proposing moves.
     """
 
-    KNOBS = ("streams", "chunk_mb", "pacing", "algo")
+    KNOBS = ("streams", "chunk_mb", "pacing", "algo", "bucket_mb")
 
     def __init__(self, streams: int = 32, chunk_mb: float = 8.0,
                  pacing: float = 1.0, *, algo: str = "psum",
+                 bucket_mb: float = 0.0,
                  window: int = 5, warmup: int = 1,
                  rel_improvement: float = 0.02,
-                 tune_pacing: bool = True, tune_algo: bool = True) -> None:
+                 tune_pacing: bool = True, tune_algo: bool = True,
+                 tune_bucket: bool = True) -> None:
         self.grids = {"streams": list(STREAM_GRID),
                       "chunk_mb": list(CHUNK_GRID_MB),
                       "pacing": list(PACING_GRID),
-                      "algo": list(ALGO_GRID)}
+                      "algo": list(ALGO_GRID),
+                      "bucket_mb": list(BUCKET_GRID_MB)}
         # seeds stay exact for any value the transfer engine itself accepts
         # (streams floor at 1, chunks at the 64 KiB engine floor, pacing
-        # clamps into [0,1] — all mirroring WidePath/streamed_psum), so the
-        # incumbent is always the config actually running
+        # clamps into [0,1], buckets floor at 0=off — all mirroring
+        # WidePath/streamed_psum), so the incumbent is always the config
+        # actually running
         self.idx = {"streams": _seed(self.grids["streams"], max(1, int(streams))),
                     "chunk_mb": _seed(self.grids["chunk_mb"],
                                       max(0.0625, float(chunk_mb))),
                     "pacing": _seed(self.grids["pacing"],
                                     max(0.0, min(1.0, float(pacing)))),
-                    "algo": _seed(self.grids["algo"], str(algo))}
+                    "algo": _seed(self.grids["algo"], str(algo)),
+                    "bucket_mb": _seed(self.grids["bucket_mb"],
+                                       max(0.0, float(bucket_mb)))}
         self.window = max(1, int(window))
         self.warmup = max(0, int(warmup))
         self.rel = float(rel_improvement)
         self.tune_pacing = tune_pacing
         self.tune_algo = tune_algo
+        self.tune_bucket = tune_bucket
         self.best_idx = dict(self.idx)
         self.best_cost: Optional[float] = None
         self.converged = False
@@ -187,9 +206,17 @@ class OnlineTuner:
 
     # -- public -------------------------------------------------------------
     def _active(self) -> tuple:
-        # a pinned algo (tune_algo=False: ppermute-shift hops) is not
-        # reported — returned configs stay pure transfer knobs
-        return tuple(k for k in self.KNOBS if k != "algo" or self.tune_algo)
+        # pinned knobs (tune_algo=False: ppermute-shift hops; tune_bucket=
+        # False: file paths) are not reported — returned configs stay knobs
+        # the caller's cost signal can actually move
+        out = []
+        for k in self.KNOBS:
+            if k == "algo" and not self.tune_algo:
+                continue
+            if k == "bucket_mb" and not self.tune_bucket:
+                continue
+            out.append(k)
+        return tuple(out)
 
     def config(self) -> dict:
         return {k: self.grids[k][self.idx[k]] for k in self._active()}
@@ -206,11 +233,20 @@ class OnlineTuner:
         like a noise-driven "improvement" and silently switch the path's
         collective.  Any in-flight algo probe reverts to the incumbent.
         """
-        if not self.tune_algo:
+        self._pin("algo", "tune_algo")
+
+    def pin_bucket(self) -> None:
+        """Stop probing the `bucket_mb` knob (same rationale as
+        :meth:`pin_algo`: file transfers ignore the sync bucket size, so
+        bucket probes on a file path are noise-driven)."""
+        self._pin("bucket_mb", "tune_bucket")
+
+    def _pin(self, knob: str, flag: str) -> None:
+        if not getattr(self, flag):
             return
-        self.tune_algo = False
-        self.idx["algo"] = self.best_idx["algo"]
-        self._moves = [m for m in self._moves if "algo" not in m]
+        setattr(self, flag, False)
+        self.idx[knob] = self.best_idx[knob]
+        self._moves = [m for m in self._moves if knob not in m]
 
     def observe(self, seconds: float) -> Optional[dict]:
         """Feed one measured cost sample; returns knobs to apply or None."""
@@ -246,6 +282,8 @@ class OnlineTuner:
             moves += [{"pacing": -1}, {"pacing": +1}]
         if self.tune_algo:
             moves += [{"algo": +1}, {"algo": -1}]
+        if self.tune_bucket:
+            moves += [{"bucket_mb": -1}, {"bucket_mb": +1}]
         ok = []
         for mv in moves:
             if all(0 <= self.best_idx[k] + d < len(g[k]) for k, d in mv.items()):
@@ -295,13 +333,14 @@ class RouteTuner:
 
     def __init__(self, path, *, window: int = 5, warmup: int = 1) -> None:
         self.route = path.route
-        # tune_algo=False: hop legs are ppermute shifts, where the
-        # all-reduce algorithm knob does not apply
+        # tune_algo/tune_bucket=False: hop legs are ppermute shifts, where
+        # neither the all-reduce algorithm nor the gradient-sync bucket
+        # size applies
         self.tuners = [OnlineTuner(streams=h.streams,
                                    chunk_mb=h.comm.chunk_mb,
                                    pacing=h.comm.pacing, algo=h.comm.algo,
                                    window=window, warmup=warmup,
-                                   tune_algo=False)
+                                   tune_algo=False, tune_bucket=False)
                        for h in self.route]
 
     @property

@@ -1,0 +1,263 @@
+"""Layer-bucketed gradient sync: partition the gradient tree into
+``bucket_bytes``-sized buckets along the stacked ``layers`` dim and issue one
+streamed cross-pod psum per bucket.
+
+Why buckets: `accum_grads` hides the sync of microbatch i under microbatch
+i+1's compute, but the *final* sync is exposed whole — and at
+``microbatches=1`` (the common large-model config) there is no overlap at
+all.  Buckets restore the paper's latency hiding at any microbatch count:
+
+  * **backward flush** — the train step wraps each bucket's layer range in a
+    ``custom_vjp`` hook (:func:`repro.core.overlap.flush_hook`), so bucket
+    k's WAN transfer is issued the moment its backward slice is produced and
+    overlaps the backward of earlier layers;
+  * **tail interleave** — the optimizer consumes the sync bucket-by-bucket
+    (:func:`repro.optim.adamw.adamw_update` with ``buckets=``): update(k)
+    depends only on sync(k) plus the clip-norm scalar, so the exposed tail
+    shrinks from the full tree to one bucket.
+
+Bucket boundaries slice the *leading layers dim* of stacked params (the
+scan-stacked ``blocks`` subtree), never a scatter/TP dim, so slicing costs
+no collective.  A leaf is layer-bucketable only when it has a *stated*
+scatter dim: leaves chunked along the dim-0 fallback would change their
+blockwise-int8 quantization blocks under layer slicing, so they ride in the
+rest bucket instead.  Within a bucket, each slice is chunked with the row
+geometry of its *full* leaf (:func:`repro.core.streams.chunk_rows`), which
+keeps bucketed transfers bit-identical to the unbucketed path for every
+compression mode.
+
+Bucket indices count from the output end of the stack (bucket 0 = the last
+layers — the first gradients backprop produces); the rest bucket (top-level
+leaves: embed/head/norms + any non-sliceable stacked leaf) comes last.
+Telemetry lands under ``{key}/bkt{i}``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import streams as st
+from repro.core.path import WidePath
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One sync bucket: a layer range of the stacked subtree, or the rest
+    bucket (``lo == hi == -1``) holding every non-layer-sliceable leaf."""
+    index: int
+    lo: int
+    hi: int
+    nbytes: int                   # payload bytes of this bucket's slices
+
+    @property
+    def is_rest(self) -> bool:
+        return self.lo < 0
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    n_layers: int
+    layers_per_bucket: int
+    buckets: tuple                # layer buckets (backward order) + rest
+    stacked_bytes: int
+    rest_bytes: int
+
+    @property
+    def layer_buckets(self) -> tuple:
+        return tuple(b for b in self.buckets if not b.is_rest)
+
+    @property
+    def rest_bucket(self) -> Optional[Bucket]:
+        for b in self.buckets:
+            if b.is_rest:
+                return b
+        return None
+
+    @property
+    def layer_bounds(self) -> list:
+        """[(lo, hi), ...] in forward (ascending-layer) order."""
+        return sorted((b.lo, b.hi) for b in self.layer_buckets)
+
+
+def bucketable_flags(leaves: list, stacked, dims=None) -> list[bool]:
+    """Per-leaf layer-bucketability: marked stacked AND a stated scatter dim
+    (>= 1, so the slice never crosses the dim chunking/quantization uses).
+
+    `stacked` is a pytree of bools aligned with the tree the leaves came
+    from (or a flat list); `dims` the raw scatter-dim tree/list (None leaves
+    kept; negative dims follow numpy semantics, `d % ndim`, exactly like
+    `streams.normalize_dims` — "no scatter dim" is spelled None, never -1).
+    Leaves that fail the test ride in the rest bucket."""
+    flag_list = (stacked if isinstance(stacked, list)
+                 else jax.tree.leaves(stacked))
+    if dims is None:
+        dim_list: list = [None] * len(leaves)
+    else:
+        dim_list = (dims if isinstance(dims, list)
+                    else jax.tree.leaves(dims, is_leaf=lambda x: x is None))
+    out = []
+    for x, f, d in zip(leaves, flag_list, dim_list):
+        ok = bool(f) and d is not None and x.ndim >= 2
+        if ok:
+            dd = d if d >= 0 else d % x.ndim
+            ok = dd != 0
+        out.append(ok)
+    return out
+
+
+def plan_buckets(leaves: list, flags: list[bool], bucket_bytes: int
+                 ) -> BucketPlan:
+    """Tile the stacked leaves' leading layers dim into ~bucket_bytes ranges.
+
+    Ranges are cut from the top of the stack (backward production order);
+    the final (lowest-layer) bucket absorbs the remainder, so the ranges
+    tile ``[0, n_layers)`` exactly — mirroring `plan_chunks`' remainder
+    handling.  Works on concrete arrays or ShapeDtypeStructs."""
+    stacked_leaves = [x for x, f in zip(leaves, flags) if f]
+    rest_bytes = sum(st.leaf_bytes(x) for x, f in zip(leaves, flags) if not f)
+    if not stacked_leaves or bucket_bytes <= 0:
+        rest = (Bucket(0, -1, -1, rest_bytes),) if rest_bytes else ()
+        return BucketPlan(0, 0, rest, 0, rest_bytes)
+    n_layers = {x.shape[0] for x in stacked_leaves}
+    if len(n_layers) != 1:
+        raise ValueError(f"stacked leaves disagree on the layers dim: "
+                         f"{sorted(n_layers)}")
+    nL = n_layers.pop()
+    stacked_bytes = sum(st.leaf_bytes(x) for x in stacked_leaves)
+    per_layer = max(1, stacked_bytes // nL)
+    lpb = max(1, int(bucket_bytes // per_layer))
+    buckets: list[Bucket] = []
+    hi = nL
+    planned = 0
+    while hi > 0:
+        lo = max(0, hi - lpb)
+        nb = sum((st.leaf_bytes(x) // nL) * (hi - lo) for x in stacked_leaves)
+        if lo == 0:   # remainder bucket absorbs the byte-accounting tail too
+            nb = stacked_bytes - planned
+        buckets.append(Bucket(len(buckets), lo, hi, nb))
+        planned += nb
+        hi = lo
+    assert planned == stacked_bytes, (planned, stacked_bytes)
+    if rest_bytes:
+        buckets.append(Bucket(len(buckets), -1, -1, rest_bytes))
+    return BucketPlan(nL, lpb, tuple(buckets), stacked_bytes, rest_bytes)
+
+
+def bucket_indices(flags: list[bool], bucket: Bucket) -> list[int]:
+    """Flat-leaf indices participating in one bucket."""
+    if bucket.is_rest:
+        return [i for i, f in enumerate(flags) if not f]
+    return [i for i, f in enumerate(flags) if f]
+
+
+def slice_leaf(x, lo: int, hi: int):
+    """Layer-range slice of a stacked leaf (abstract-shape aware)."""
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((hi - lo,) + tuple(x.shape[1:]), x.dtype)
+    return jax.lax.slice_in_dim(x, lo, hi, axis=0)
+
+
+def bucket_payload(leaves: list, flags: list[bool], bucket: Bucket
+                   ) -> tuple[list, list[int]]:
+    """(payload leaves, their original flat indices) for one bucket."""
+    idx = bucket_indices(flags, bucket)
+    if bucket.is_rest:
+        return [leaves[i] for i in idx], idx
+    return [slice_leaf(leaves[i], bucket.lo, bucket.hi) for i in idx], idx
+
+
+def aligned_chunks(full_leaves: list, payload: list, idx: list[int],
+                   dim_list: list, chunk_bytes: int) -> list:
+    """Chunk plan for a bucket payload using each FULL leaf's row geometry,
+    so chunk boundaries along the scatter dim — and therefore blockwise-int8
+    quantization blocks — match the unbucketed transfer exactly."""
+    rows = [st.chunk_rows(full_leaves[i], dim_list[i], chunk_bytes)
+            for i in idx]
+    sub_dims = [dim_list[i] for i in idx]
+    return st.plan_chunks(payload, sub_dims, chunk_bytes, rows=rows)
+
+
+def bucketed_sync(tree, path: WidePath, *, stacked, dims=None,
+                  site_groups=None, tel_prefix: Optional[str] = None,
+                  bucket_bytes: Optional[int] = None):
+    """Chunked/streamed cross-pod psum of a pytree, one transfer per bucket.
+
+    `stacked` marks the leaves carrying a leading layers dim (pytree of
+    bools or flat list); `dims` is the usual per-leaf scatter-dim tree.
+    Numerically identical (bit-for-bit, every algo × compression) to
+    ``streamed_psum(tree, ...)`` — buckets only re-partition which chunks
+    travel together, and chunk geometry within a slice mirrors the full
+    leaf's.  Per-bucket plans/timings land under ``{key}/bkt{i}``.
+    """
+    from repro.core.collectives import streamed_psum
+    from repro.sharding import manual_axes_present
+    bb = path.bucket_bytes if bucket_bytes is None else int(bucket_bytes)
+    if bb <= 0:
+        return streamed_psum(tree, path, dims=dims, site_groups=site_groups)
+    if path.axis not in manual_axes_present(path.axis):
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    flags = bucketable_flags(leaves, stacked, dims)
+    ndims = st.normalize_dims(leaves, dims)
+    plan = plan_buckets(leaves, flags, bb)
+    key = tel_prefix or path.key
+    pieces: dict[int, list] = {i: [] for i in range(len(leaves))}
+    out: list = list(leaves)
+    for b in plan.buckets:
+        payload, idx = bucket_payload(leaves, flags, b)
+        if not payload:
+            continue
+        chunks = aligned_chunks(leaves, payload, idx, ndims, path.chunk_bytes)
+        synced = streamed_psum(payload, path, dims=[ndims[i] for i in idx],
+                               site_groups=site_groups,
+                               tel_key=f"{key}/bkt{b.index}", chunks=chunks)
+        for i, s in zip(idx, synced):
+            if b.is_rest:
+                out[i] = s
+            else:
+                pieces[i].append((b.lo, s))
+    for i, ps in pieces.items():
+        if ps:
+            out[i] = jnp.concatenate([s for _, s in sorted(ps)], axis=0)
+    return jax.tree.unflatten(treedef, out)
+
+
+def note_bucket_plans(path: WidePath, leaves: list, dims, stacked,
+                      bucket_bytes: Optional[int] = None,
+                      key: Optional[str] = None,
+                      world: int = 1,
+                      flags: Optional[list] = None) -> Optional[BucketPlan]:
+    """Record per-bucket traffic plans from abstract leaves (build time).
+
+    Mirrors what `bucketed_sync` will note at trace time, so ``MPW.Report``
+    shows the ``/bkt{i}`` breakdown even before the first step executes.
+    `flags` overrides the bucketability test — the backward-flush path
+    buckets *every* stacked leaf with its segment, so its notes pass the
+    raw stacked flags.  Returns the plan (None when bucketing is off)."""
+    from repro.core import telemetry as tel
+    from repro.core.ring import wire_bytes_per_pod
+    bb = path.bucket_bytes if bucket_bytes is None else int(bucket_bytes)
+    if bb <= 0:
+        return None
+    if flags is None:
+        flags = bucketable_flags(leaves, stacked, dims)
+    ndims = st.normalize_dims(leaves, dims)
+    plan = plan_buckets(leaves, flags, bb)
+    key = key or path.key
+    for b in plan.buckets:
+        payload, idx = bucket_payload(leaves, flags, b)
+        if not payload:
+            continue
+        chunks = aligned_chunks(leaves, payload, idx, ndims, path.chunk_bytes)
+        buckets = st.assign_streams(chunks, path.streams)
+        wire = wire_bytes_per_pod(sum(c.nbytes for c in chunks), world,
+                                  algo=path.comm.algo,
+                                  compress=path.comm.compress)
+        tel.note_plan(f"{key}/bkt{b.index}", **st.plan_summary(
+            chunks, buckets, path.streams, path.chunk_bytes,
+            path.comm.pacing, algo=path.comm.algo, world=world,
+            compress=path.comm.compress, wire_bytes=int(round(wire))))
+    return plan

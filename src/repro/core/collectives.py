@@ -67,7 +67,7 @@ def _reduce_one(x: jax.Array, dim: int, axis: str, compress: str,
 
 
 def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
-                  tel_key=None, subgroup=None):
+                  tel_key=None, subgroup=None, chunks=None):
     """Chunked, streamed, paced psum of a pytree over path.axis.
 
     This is MPW_Send/Recv semantics for an all-reduce payload: the payload is
@@ -89,7 +89,10 @@ def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
     (bandwidth-optimal ppermute rings, int8-requantized per hop).  `subgroup`
     restricts the exchange to a subset of pod indices (the site-gateway
     exchange — see :func:`site_allreduce`); wire-byte accounting is averaged
-    over the whole axis since only members carry WAN traffic.
+    over the whole axis since only members carry WAN traffic.  `chunks` (a
+    precomputed ``streams.Chunk`` list over this tree's flattened leaves)
+    overrides the planner — bucketed transfers use it to keep a slice's
+    chunk geometry identical to the full leaf's (int8 block alignment).
     """
     algo = path.comm.algo
     if algo not in rg.ALGOS:
@@ -97,10 +100,12 @@ def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
     if path.axis not in manual_axes_present(path.axis):
         return tree  # axis absent (single-pod): nothing to cross
     if site_groups is not None:
-        return site_allreduce(tree, path, site_groups, dims=dims)
+        return site_allreduce(tree, path, site_groups, dims=dims,
+                              chunks=chunks, tel_key=tel_key)
     leaves, treedef = jax.tree.flatten(tree)
     dim_list = st.normalize_dims(leaves, dims)
-    chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
+    if chunks is None:
+        chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
     # trace-time: the plan is static per executable; record its shape once
     world = jax.lax.axis_size(path.axis)
@@ -151,7 +156,8 @@ def streamed_psum(tree, path: WidePath, dims=None, site_groups=None,
     return jax.tree.unflatten(treedef, out_leaves)
 
 
-def site_allreduce(tree, path: WidePath, site_groups, dims=None):
+def site_allreduce(tree, path: WidePath, site_groups, dims=None, chunks=None,
+                   tel_key=None):
     """Topology-aware hierarchical psum over the pod axis: reduce intra-site
     before crossing the slow hop.
 
@@ -181,6 +187,8 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
     opens WAN sockets on them), so `MPW.Report()` throughput reflects what
     the slow links carry rather than the emulation's masked-zero traffic.
     """
+    # `chunks` (precomputed chunk plan) applies to the WAN stage only — the
+    # intra-site stage is unchunked psum either way
     groups = [list(g) for g in site_groups]
     if len({len(g) for g in groups}) > 1:
         # TPU psum lowering requires equal-size axis_index_groups; fail the
@@ -199,9 +207,9 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
     # negligible, the paper uses 1 stream locally)
     reduced = [jax.lax.psum(l, path.axis, axis_index_groups=groups)
                for l in leaves]
-    chunks = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
-    tel.note_plan(f"{path.key}/intra", **st.plan_summary(
-        chunks, st.assign_streams(chunks, 1), 1, path.chunk_bytes, 1.0,
+    intra = st.plan_chunks(leaves, dim_list, path.chunk_bytes)
+    tel.note_plan(f"{tel_key or path.key}/intra", **st.plan_summary(
+        intra, st.assign_streams(intra, 1), 1, path.chunk_bytes, 1.0,
         world=len(groups[0])))
     if len(groups) == 1:
         return jax.tree.unflatten(treedef, reduced)  # one site: no WAN hop
@@ -209,7 +217,7 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
     gateways = [g[0] for g in groups]
     idx = jax.lax.axis_index(path.axis)
     is_gw = jnp.any(idx == jnp.asarray(gateways, jnp.int32))
-    wan_key = None if path.hops else f"{path.key}/wan"
+    wan_key = None if path.hops else f"{tel_key or path.key}/wan"
 
     if path.comm.algo in ("ring", "ring2"):
         # stage 2'/3': ring among the gateways only — no gateway mask
@@ -217,7 +225,7 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
         # lanes come back holding garbage, so mask before the broadcast
         exchanged = streamed_psum(jax.tree.unflatten(treedef, reduced), path,
                                   dims=dim_list, tel_key=wan_key,
-                                  subgroup=gateways)
+                                  subgroup=gateways, chunks=chunks)
         gw_only = [jnp.where(is_gw, l, jnp.zeros_like(l))
                    for l in jax.tree.leaves(exchanged)]
         bcast = [jax.lax.psum(l, path.axis, axis_index_groups=groups)
@@ -231,7 +239,8 @@ def site_allreduce(tree, path: WidePath, site_groups, dims=None):
     # gateway-only site-sums is the global sum, delivered everywhere.
     # `subgroup` here only scopes the wire-byte accounting to the gateways.
     return streamed_psum(jax.tree.unflatten(treedef, masked), path,
-                         dims=dim_list, tel_key=wan_key, subgroup=gateways)
+                         dims=dim_list, tel_key=wan_key, subgroup=gateways,
+                         chunks=chunks)
 
 
 def _note_hop_plans(path: WidePath, leaves, dim_list) -> None:

@@ -7,9 +7,21 @@ iteration i+1's forward/backward, so the XLA latency-hiding scheduler can
 run the collective concurrently with compute.  Only the final microbatch's
 sync is exposed — 1/m of the naive exposure (paper: 11 ms RTT coupling
 reduced to 6 ms exposed, 1.2% of runtime).
+
+That exposure is attacked further by layer buckets (`repro.core.buckets`):
+
+  * :func:`flush_hook` — a ``custom_vjp`` identity the train step wraps
+    around each bucket's layer range; its *backward* runs the bucket's
+    cross-pod sync, so the WAN transfer of late-layer gradients is issued
+    while the backward of earlier layers is still computing.  This is what
+    makes ``microbatches=1`` overlap at all.
+  * :func:`modeled_exposure` — the alpha-beta/window schedule model of what
+    the bucketed step exposes, feeding the ``exposed_s``/``overlapped_s``
+    telemetry and `benchmarks/overlap_efficiency.py`.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable
 
 import jax
@@ -57,3 +69,103 @@ def accum_grads(grad_fn: Callable, params, microbatches, *, sync: Callable,
     s = sync(pending)                   # exposed tail (1/m of the naive cost)
     synced = s if synced is None else jax.tree.map(jnp.add, synced, s)
     return total_loss / m, metrics, synced
+
+
+# ---------------------------------------------------------------------------
+# backward-side flush: sync-in-backward via custom_vjp
+# ---------------------------------------------------------------------------
+
+def flush_hook(sync_fn: Callable) -> Callable:
+    """Identity-in-forward hook whose *backward* runs `sync_fn` on the
+    cotangent tree.
+
+    Wrapped around a bucket's (layer-sliced) params before the layer scan,
+    the hook plants the bucket's cross-pod gradient sync exactly where the
+    bucket's backward slice is produced: the transfer has no data dependence
+    on the backward of earlier layers, so the latency-hiding scheduler can
+    run it concurrently (pMR's halo-exchange-behind-stencil trick, applied
+    to backprop).  `sync_fn` must return the same dtypes it receives —
+    custom_vjp cotangents match primal dtypes, so cast to the f32 wire dtype
+    and back inside.
+    """
+    @jax.custom_vjp
+    def flush(tree):
+        return tree
+
+    def fwd(tree):
+        return tree, None
+
+    def bwd(_, g):
+        return (sync_fn(g),)
+
+    flush.defvjp(fwd, bwd)
+    return flush
+
+
+# ---------------------------------------------------------------------------
+# modeled exposure: what the bucketed schedule leaves on the critical path
+# ---------------------------------------------------------------------------
+
+def modeled_exposure(payload_bytes: float, link, *, streams: int,
+                     chunk_bytes: float, pacing: float = 1.0,
+                     compute_window: float = 0.0, bucket_bytes: float = 0.0,
+                     microbatches: int = 1, world: int = 2,
+                     algo: str = "psum", compress: str = "none",
+                     backward_frac: float = 2.0 / 3.0) -> dict:
+    """Model one train step's cross-pod comm exposure.
+
+    `payload_bytes` is one microbatch's gradient payload; `compute_window`
+    the modeled compute seconds of one microbatch (fwd+bwd — from
+    `repro.launch.roofline.modeled_compute_window`).  Per-transfer wall
+    seconds come from :func:`repro.core.autotune.simulate_transfer_s` (the
+    window-capped WAN landscape, algo/compress/world aware).
+
+    Schedule:
+      * microbatches 1..m-1 sync pipelined under the next microbatch's full
+        compute window (`accum_grads`); each exposes max(0, T - W).
+      * the FINAL microbatch has no following compute.  Without buckets its
+        whole sync T is exposed.  With buckets, bucket k's transfer is
+        issued when its layer range finishes backward (k-th fraction of the
+        backward window `backward_frac * W`), transfers serialize on the
+        link, and only what spills past the backward is exposed — the
+        optimizer then consumes buckets as they land, so the exposed tail
+        floors at the last bucket.
+
+    Returns dict(exposed_s, overlapped_s, comm_s, n_buckets, per_bucket_s).
+    """
+    from repro.core.autotune import simulate_transfer_s
+
+    def t_of(nbytes: float) -> float:
+        return simulate_transfer_s(nbytes, link, streams=streams,
+                                   chunk_bytes=chunk_bytes, pacing=pacing,
+                                   algo=algo, world=world, compress=compress)
+
+    m = max(1, int(microbatches))
+    W = max(0.0, float(compute_window))
+    t_all = t_of(payload_bytes)
+    if bucket_bytes and bucket_bytes > 0:
+        # successive buckets' chunks queue onto the SAME streams back to
+        # back (streamed_psum keeps the channels fed across bucket
+        # boundaries), so a bucket's wire time is its proportional share of
+        # the whole transfer — plus one launch latency per bucket, the
+        # per-bucket floor that stops "smaller is always better"
+        n_buckets = max(1, math.ceil(payload_bytes / bucket_bytes))
+        per_bucket = [t_all / n_buckets + link.latency_s] * n_buckets
+    else:
+        n_buckets = 1
+        per_bucket = [t_all]
+
+    # pipelined microbatches: sync under the next microbatch's compute
+    exposed = (m - 1) * max(0.0, sum(per_bucket) - W)
+    # final microbatch: buckets flush during its backward
+    Wb = backward_frac * W
+    end = 0.0
+    for k, t_k in enumerate(per_bucket):
+        ready = Wb * (k + 1) / n_buckets
+        end = max(end, ready) + t_k
+    exposed += max(0.0, end - Wb)
+    comm = m * sum(per_bucket)
+    return dict(exposed_s=exposed,
+                overlapped_s=max(0.0, comm - exposed),
+                comm_s=comm, n_buckets=n_buckets,
+                per_bucket_s=per_bucket)

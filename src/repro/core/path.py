@@ -135,6 +135,11 @@ class WidePath:
         return max(1 << 16, int(self.comm.chunk_mb * (1 << 20)))
 
     @property
+    def bucket_bytes(self) -> int:
+        """Gradient-sync bucket size in bytes; 0 = bucketing disabled."""
+        return max(0, int(self.comm.bucket_mb * (1 << 20)))
+
+    @property
     def key(self) -> str:
         """Registry key for this path's telemetry slot."""
         return f"{self.name or self.axis}:{self.link.name}"

@@ -73,18 +73,43 @@ def wire_bytes_per_pod(payload_bytes: float, world: int, *,
 # wire codecs: what one ring step actually ships
 # ---------------------------------------------------------------------------
 
+def _wire_block(m: int) -> int:
+    """Quantization block for a segment-axis extent of m elements.
+
+    min(QBLOCK, m): short segment rows become their own block instead of
+    being zero-padded to QBLOCK (padding would inflate real wire bytes by
+    up to QBLOCK/m per row — unmodeled traffic).  The block depends only on
+    the segment extent along the scatter dim, which layer-bucket slicing
+    never changes, so the choice preserves bucketing bit-identity."""
+    return max(1, min(QBLOCK, int(m)))
+
+
 def _q_wire(seg: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Quantize a segment to the int8 wire format (flat int8 + f32 scales)."""
-    flat = seg.reshape(-1)
-    pad = (-flat.shape[0]) % QBLOCK
+    """Quantize a segment to the int8 wire format.
+
+    Blocks run along the segment axis (dim 0 — the slice of the leaf's
+    scatter dim this rank owns), one block row per coordinate of the other
+    dims: quantization never mixes values across non-scatter dims.  That
+    keeps the wire format *invariant under layer-bucket slicing* (a bucket
+    slices the stacked `layers` dim — see repro/core/buckets.py), so a
+    bucketed ring transfer is bit-identical to the whole-tree one; it also
+    scopes each scale to one (row, block) instead of the flattened payload.
+    """
+    y = jnp.moveaxis(seg, 0, -1) if seg.ndim > 1 else seg
+    block = _wire_block(seg.shape[0])
+    pad = (-y.shape[-1]) % block
     if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return ops.quant_int8(flat, block=QBLOCK)
+        y = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)])
+    return ops.quant_int8(y, block=block)
 
 
 def _dq_wire(q: jax.Array, s: jax.Array, like: jax.Array) -> jax.Array:
-    y = ops.dequant_int8(q, s, block=QBLOCK, dtype=jnp.float32)
-    return y[:like.size].reshape(like.shape)
+    y = ops.dequant_int8(q, s, block=_wire_block(like.shape[0]),
+                         dtype=jnp.float32)
+    n = like.shape[0]
+    if like.ndim > 1:
+        return jnp.moveaxis(y[..., :n], -1, 0)
+    return y[:n]
 
 
 def _hop(seg: jax.Array, axis: str, perm, compress: str) -> jax.Array:

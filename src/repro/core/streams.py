@@ -36,23 +36,42 @@ def leaf_bytes(x) -> int:
     return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
 
 
-def plan_chunks(leaves: list, dims: list[Optional[int]], chunk_bytes: int
-                ) -> list[Chunk]:
-    """Split each leaf into chunks of <= chunk_bytes along its scatter dim."""
+def chunk_rows(x, dim: Optional[int], chunk_bytes: int) -> Optional[int]:
+    """Rows-per-chunk the planner would pick for this leaf (None: unchunked).
+
+    Exposed so bucketed transfers (`repro.core.buckets`) can chunk a *slice*
+    of a leaf with the row geometry of the full leaf: identical chunk
+    boundaries along the scatter dim keep blockwise int8 quantization
+    bit-identical to the unbucketed transfer."""
+    nb = leaf_bytes(x)
+    if dim is None or nb <= chunk_bytes or x.ndim == 0 or x.shape[dim] <= 1:
+        return None
+    return max(1, chunk_bytes // max(nb // x.shape[dim], 1))
+
+
+def plan_chunks(leaves: list, dims: list[Optional[int]], chunk_bytes: int,
+                rows: Optional[list] = None) -> list[Chunk]:
+    """Split each leaf into chunks of <= chunk_bytes along its scatter dim.
+
+    `rows` (per-leaf rows-per-chunk override, None entries = default
+    behaviour) forces a leaf's chunk geometry — see :func:`chunk_rows`."""
     chunks: list[Chunk] = []
     for i, (x, dim) in enumerate(zip(leaves, dims)):
         nb = leaf_bytes(x)
-        if dim is None or nb <= chunk_bytes or x.shape[dim] <= 1:
+        forced = rows[i] if rows is not None else None
+        if forced is None and (dim is None or nb <= chunk_bytes
+                               or x.shape[dim] <= 1):
             chunks.append(Chunk(i, dim if dim is not None else 0, 0,
                                 x.shape[dim] if dim is not None and x.ndim else 0, nb))
             continue
         n = x.shape[dim]
         bytes_per_row = nb // n
-        rows = max(1, chunk_bytes // max(bytes_per_row, 1))
+        rows_i = (forced if forced is not None
+                  else max(1, chunk_bytes // max(bytes_per_row, 1)))
         start = 0
         planned = 0
         while start < n:
-            size = min(rows, n - start)
+            size = min(rows_i, n - start)
             # the last chunk absorbs the truncation remainder of nb // n, so
             # summed chunk nbytes (plan_summary.payload_bytes, telemetry GB/s)
             # exactly equals the leaf's bytes

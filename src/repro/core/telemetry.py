@@ -62,6 +62,12 @@ class PathTelemetry:
     transfers: int = 0
     total_bytes: int = 0
     total_seconds: float = 0.0
+    # modeled per-step exposure split (repro.core.overlap.modeled_exposure):
+    # exposed_s = cross-pod seconds left on the critical path, overlapped_s
+    # = seconds hidden under compute.  Noted at build/retune time by the
+    # step builder; None until a step with a compute window was built.
+    exposed_s: Optional[float] = None
+    overlapped_s: Optional[float] = None
     samples: deque = field(default_factory=deque)   # (step, seconds, bytes)
     retunes: list = field(default_factory=list)     # (step, {knob: value})
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
@@ -69,6 +75,11 @@ class PathTelemetry:
     def note_plan(self, **kw) -> None:
         with self._lock:
             self.plan = PlanInfo(**kw)
+
+    def note_overlap(self, exposed_s: float, overlapped_s: float) -> None:
+        with self._lock:
+            self.exposed_s = float(exposed_s)
+            self.overlapped_s = float(overlapped_s)
 
     def note_retune(self, step: Optional[int], config: dict) -> None:
         with self._lock:
@@ -118,6 +129,7 @@ class PathTelemetry:
                 "retunes": list(self.retunes),
             }
             plan = self.plan
+            exposed, overlapped = self.exposed_s, self.overlapped_s
         secs = sum(s for _, s, _ in samples)
         byts = sum(b for _, _, b in samples)
         out["window_mean_s"] = secs / len(samples) if samples else 0.0
@@ -125,6 +137,12 @@ class PathTelemetry:
         if plan is not None:
             out["plan"] = asdict(plan)
             out["stream_utilization"] = plan.stream_utilization
+        if exposed is not None:
+            out["exposed_s"] = exposed
+            out["overlapped_s"] = overlapped
+            total = exposed + (overlapped or 0.0)
+            out["overlap_efficiency"] = ((overlapped or 0.0) / total
+                                         if total > 0 else 0.0)
         return out
 
 
@@ -180,8 +198,9 @@ class Telemetry:
         if not rep:
             return "(no paths recorded)"
         rows = ["| path | transfers | bytes/xfer | wire/pod (algo) | "
-                "streams used/conf | chunk | window mean | achieved |",
-                "|---|---|---|---|---|---|---|---|"]
+                "streams used/conf | chunk | window mean | achieved "
+                "| exposed | overlap |",
+                "|---|---|---|---|---|---|---|---|---|---|"]
         for key in sorted(rep):
             s = rep[key]
             plan = s.get("plan")
@@ -194,10 +213,15 @@ class Telemetry:
             else:
                 per = s["total_bytes"] / max(s["transfers"], 1)
                 wire, streams, chunk = "-", "-", "-"
+            if "exposed_s" in s:
+                exposed = f"{s['exposed_s']*1e3:.1f} ms"
+                overlap = f"{s['overlap_efficiency']*100:.0f}%"
+            else:
+                exposed, overlap = "-", "-"
             rows.append(
                 f"| {key} | {s['transfers']} | {_fmt_bytes(per)} | {wire} "
                 f"| {streams} | {chunk} | {s['window_mean_s']*1e3:.1f} ms "
-                f"| {s['achieved_GBps']:.3f} GB/s |")
+                f"| {s['achieved_GBps']:.3f} GB/s | {exposed} | {overlap} |")
         return "\n".join(rows)
 
     def reset(self, key: Optional[str] = None) -> None:
@@ -225,6 +249,10 @@ def get_telemetry() -> Telemetry:
 # module-level conveniences (hot-path call sites stay one line)
 def note_plan(key: str, **kw) -> None:
     _GLOBAL.note_plan(key, **kw)
+
+
+def note_overlap(key: str, exposed_s: float, overlapped_s: float) -> None:
+    _GLOBAL.path(key).note_overlap(exposed_s, overlapped_s)
 
 
 def record(key: str, seconds: float, nbytes: Optional[int] = None,

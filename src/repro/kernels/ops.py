@@ -238,7 +238,19 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
 # ---------------------------------------------------------------------------
 
 def quant_int8(x: jax.Array, *, block: int = 256, impl: str = "auto"):
-    """x: (..., n) with n % block == 0 -> (int8, f32 scales (..., n/block))."""
+    """x: (..., n) with n % block == 0 -> (int8, f32 scales (..., n/block)).
+
+    Raises ValueError (not a bare assert) on a ragged trailing dim: callers
+    must pad to the block size first (compress.quant_chunk does), and layer-
+    bucketed slicing makes ragged trailing dims easy to hit by accident.
+    """
+    n_last = x.shape[-1] if x.ndim else 0
+    if x.ndim == 0 or n_last % block != 0:
+        raise ValueError(
+            f"quant_int8: leaf of shape {tuple(x.shape)} has trailing dim "
+            f"{n_last}, not divisible by block={block}; pad the trailing "
+            f"dim to a multiple of the quantization block (see "
+            f"repro.core.compress.quant_chunk)")
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":

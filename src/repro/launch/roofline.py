@@ -182,3 +182,18 @@ def model_flops_for(cfg, shape) -> float:
     if shape.kind == "prefill":
         return 2.0 * n * shape.global_batch * shape.seq_len
     return 2.0 * n * shape.global_batch * 1  # decode: one token
+
+
+def modeled_compute_window(cfg, shape, *, n_chips: int,
+                           microbatches: int = 1) -> float:
+    """Seconds of compute one *microbatch* offers for hiding WAN transfers.
+
+    The FLOPs-roofline term of one microbatch (6·N·B·S / m over the fleet's
+    peak): the window `autotune_path(compute_window=)` optimizes exposure
+    against, and the budget the bucketed backward flush spreads its
+    transfers over.  Deliberately analytic (no compiled HLO needed) so the
+    step builder can call it on every retune; the full per-executable
+    roofline lives in `benchmarks/roofline_report.py`.
+    """
+    flops = model_flops_for(cfg, shape)
+    return flops / max(1, int(microbatches)) / (max(1, int(n_chips)) * PEAK_FLOPS)

@@ -137,7 +137,8 @@ class Transformer:
         return x, aux
 
     def _stack(self, blocks: dict, x: jax.Array, positions: jax.Array,
-               enc_out: Optional[jax.Array], gather: Gather) -> tuple[jax.Array, jax.Array]:
+               enc_out: Optional[jax.Array], gather: Gather,
+               flush_segments=None) -> tuple[jax.Array, jax.Array]:
         gather = gather or _identity_gather
         body = functools.partial(self._apply_block, positions=positions,
                                  enc_out=enc_out, gather=gather)
@@ -153,7 +154,24 @@ class Transformer:
             x2, a = body(lp, x)
             return (x2, aux + a), None
 
-        (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), blocks)
+        if flush_segments is None:
+            (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), blocks)
+            return x, aux
+
+        # bucketed backward overlap: the scan is split at bucket boundaries
+        # and each segment's stacked params pass through a flush hook (a
+        # custom_vjp identity whose backward syncs that bucket's gradients
+        # cross-pod the moment its backward slice is produced — see
+        # repro.core.overlap.flush_hook).  Forward math is identical to the
+        # single scan: the segments traverse the same layers in order.
+        bounds, hooks = flush_segments
+        carry = (x, jnp.float32(0.0))
+        for (lo, hi), hook in zip(bounds, hooks):
+            seg = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0), blocks)
+            seg = hook(seg)
+            carry, _ = jax.lax.scan(step, carry, seg)
+        x, aux = carry
         return x, aux
 
     def _apply_block(self, lp, x, *, positions, enc_out, gather):
@@ -204,12 +222,17 @@ class Transformer:
         x, _ = jax.lax.scan(step, x, blocks)
         return L.rms_norm(x, enc["ln_f"], c.norm_eps)
 
-    def hidden_states(self, params: dict, batch: dict, *, gather: Gather = None
-                      ) -> tuple[jax.Array, jax.Array, int]:
-        """Full-sequence forward to final-norm hidden states."""
+    def hidden_states(self, params: dict, batch: dict, *, gather: Gather = None,
+                      flush_segments=None) -> tuple[jax.Array, jax.Array, int]:
+        """Full-sequence forward to final-norm hidden states.
+
+        `flush_segments` = (layer bounds, per-bucket flush hooks) splits the
+        layer scan at gradient-bucket boundaries for backward-side sync
+        overlap (see :meth:`_stack`); None keeps the single fused scan."""
         enc_out = self._encode(params, batch, gather)
         x, positions, n_prefix = self._embed_inputs(params, batch)
-        x, aux = self._stack(params["blocks"], x, positions, enc_out, gather)
+        x, aux = self._stack(params["blocks"], x, positions, enc_out, gather,
+                             flush_segments=flush_segments)
         x = L.rms_norm(x, params["ln_f"], self.cfg.norm_eps)
         return x, aux, n_prefix
 
@@ -218,15 +241,16 @@ class Transformer:
             return params["embed"].T
         return params["head"]
 
-    def loss(self, params: dict, batch: dict, *, gather: Gather = None
-             ) -> tuple[jax.Array, dict]:
+    def loss(self, params: dict, batch: dict, *, gather: Gather = None,
+             flush_segments=None) -> tuple[jax.Array, dict]:
         """batch["tokens"]: (B, S+1) — teacher forcing; extra stub inputs as
         required by the family. Returns (mean_local_loss, metrics)."""
         c = self.cfg
         tokens = batch["tokens"]
         inputs = {**batch, "tokens": tokens[:, :-1]}
         labels = tokens[:, 1:]
-        x, aux, n_prefix = self.hidden_states(params, inputs, gather=gather)
+        x, aux, n_prefix = self.hidden_states(params, inputs, gather=gather,
+                                              flush_segments=flush_segments)
         if n_prefix:
             x = x[:, n_prefix:]
         sum_loss, count = L.chunked_ce_loss(x, self._head(params), labels)

@@ -4,6 +4,15 @@ In ZeRO mode gradients/params/optimizer state are shards over the "data"
 axis: the global grad-norm needs a psum over "data" for scattered leaves but
 NOT for replicated ones (they already hold the full value on every rank).
 The `dims` tree (per-leaf scatter dim or None) encodes which is which.
+
+With ``buckets=`` (a :class:`repro.core.buckets.BucketPlan` + the stacked
+flags it was planned with) the update is applied bucket-by-bucket over
+layer-range slices: update(bucket k)'s only data dependence is bucket k's
+gradient slice plus the clip-norm scalar, so while bucket k+1's cross-pod
+sync is still in flight the scheduler may already run update(k) — the
+exposed tail of the step shrinks from the whole tree to one bucket.  The
+math is element-wise, so the bucketed update is bit-identical to the fused
+one.
 """
 from __future__ import annotations
 
@@ -47,8 +56,16 @@ def global_norm(grads, dims=None, data_axes: Sequence[str] = ("data",)) -> jax.A
 
 
 def adamw_update(grads, opt_state, params, tc: TrainConfig, lr: jax.Array, *,
-                 dims=None, data_axes: Sequence[str] = ("data",)):
-    """One AdamW step. Returns (new_params, new_opt_state, stats)."""
+                 dims=None, data_axes: Sequence[str] = ("data",),
+                 buckets=None, stacked=None):
+    """One AdamW step. Returns (new_params, new_opt_state, stats).
+
+    `buckets` (a ``repro.core.buckets.BucketPlan``) with `stacked` (the
+    per-leaf flags the plan was built with) applies the update bucket-by-
+    bucket over layer slices — bit-identical numerics, but each bucket's
+    update depends only on its own gradient slice (+ the clip scalar), so
+    updates interleave with still-in-flight sync buckets.
+    """
     step = opt_state["step"] + 1
     norm = global_norm(grads, dims, data_axes)
     scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(norm, 1e-12)) \
@@ -68,8 +85,54 @@ def adamw_update(grads, opt_state, params, tc: TrainConfig, lr: jax.Array, *,
         p2 = p.astype(jnp.float32) - lr * delta
         return p2.astype(p.dtype), m2, v2
 
+    if buckets is not None and buckets.buckets:
+        new_p, new_m, new_v = _bucketed_apply(
+            upd, params, grads, opt_state["m"], opt_state["v"],
+            buckets, stacked)
+        return (new_p, {"m": new_m, "v": new_v, "step": step},
+                {"grad_norm": norm})
+
     out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
     new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
     new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
     new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
     return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": norm}
+
+
+def _bucketed_apply(upd, params, grads, m, v, plan, stacked):
+    """Apply a leafwise (p,g,m,v) -> (p,m,v) update bucket-by-bucket.
+
+    Stacked leaves are updated per layer-range slice and re-stitched by
+    concatenation (exact: the slices tile the layers dim); rest-bucket
+    leaves update whole.  Elementwise math => identical results, but the
+    HLO dependency structure is per-bucket.
+    """
+    from repro.core.buckets import bucket_indices, slice_leaf
+    leaves_p, td = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(m)
+    leaves_v = jax.tree.leaves(v)
+    flags = (stacked if isinstance(stacked, list)
+             else jax.tree.leaves(stacked))
+    out_p: list = list(leaves_p)
+    out_m: list = list(leaves_m)
+    out_v: list = list(leaves_v)
+    pieces: dict[int, list] = {}
+    for b in plan.buckets:
+        for i in bucket_indices(flags, b):
+            if b.is_rest:
+                out_p[i], out_m[i], out_v[i] = upd(
+                    leaves_p[i], leaves_g[i], leaves_m[i], leaves_v[i])
+            else:
+                res = upd(slice_leaf(leaves_p[i], b.lo, b.hi),
+                          slice_leaf(leaves_g[i], b.lo, b.hi),
+                          slice_leaf(leaves_m[i], b.lo, b.hi),
+                          slice_leaf(leaves_v[i], b.lo, b.hi))
+                pieces.setdefault(i, []).append((b.lo, res))
+    for i, ps in pieces.items():
+        ps.sort(key=lambda t: t[0])
+        out_p[i] = jnp.concatenate([r[0] for _, r in ps], axis=0)
+        out_m[i] = jnp.concatenate([r[1] for _, r in ps], axis=0)
+        out_v[i] = jnp.concatenate([r[2] for _, r in ps], axis=0)
+    return (jax.tree.unflatten(td, out_p), jax.tree.unflatten(td, out_m),
+            jax.tree.unflatten(td, out_v))

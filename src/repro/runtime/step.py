@@ -14,6 +14,7 @@ Architecture (see DESIGN.md §2/§3):
 from __future__ import annotations
 
 import functools
+import inspect
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -24,11 +25,13 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import RunConfig
+from repro.core import buckets as bk
 from repro.core.autotune import autotune_path
 from repro.core.collectives import (flat_allreduce, gateway_allreduce,
                                     streamed_psum)
-from repro.core.overlap import accum_grads
+from repro.core.overlap import accum_grads, flush_hook
 from repro.core.path import INTERPOD, WidePath
+from repro.launch.roofline import modeled_compute_window
 from repro.models import build_model
 from repro.models.param import (PD, is_pd_leaf, leaf_bytes_pd, tree_abstract,
                                 tree_fsdp_dims, tree_init, tree_specs)
@@ -75,6 +78,8 @@ class StepBundle:
     path: WidePath
     cache_defs: Any = None             # decode bundles only
     replan: Any = None                 # re-notes this bundle's traffic plan
+    bucket_plan: Any = None            # BucketPlan when bucketed overlap is on
+    compute_window: float = 0.0        # modeled overlappable seconds / microbatch
 
     def abstract_state(self):
         defs = self.param_defs
@@ -220,8 +225,51 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
     path = WidePath(axis="pod", comm=rc.comm, link=INTERPOD, name="train")
     if route is not None:
         path = path.with_hops(route.as_hops(bottleneck_comm=rc.comm))
+    tc = rc.train
+    m_micro = max(1, tc.microbatches)
     payload = _param_bytes(defs) // (data_size if zero else 1)
-    path = autotune_path(path, payload, world=int(mesh.shape.get("pod", 1)))
+    pod_world = int(mesh.shape.get("pod", 1))
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    # exposure-aware build-time tuning: the sync can hide under one
+    # microbatch of modeled compute, so the alpha-beta warm start minimizes
+    # *exposed* seconds against that window, not total link seconds
+    window = modeled_compute_window(rc.model, rc.shape, n_chips=n_chips,
+                                    microbatches=m_micro)
+    path = autotune_path(path, payload, world=pod_world,
+                         compute_window=window)
+
+    # ---- bucketed overlap setup (see repro/core/buckets.py) ---------------
+    # * flush mode: the layer scan is split at bucket boundaries; a
+    #   custom_vjp hook syncs each bucket during backprop (overlap even at
+    #   microbatches=1).  Needs model support and an uncompressed wire —
+    #   compressed wires keep the tail mode's bit-identical guarantee (and
+    #   at TP>1 their nested shard_map cannot wrap per-segment hooks).
+    # * tail mode (fallback): the post-backward sync goes bucket-by-bucket
+    #   so the optimizer can consume bucket k while k+1 is in flight.
+    bucket_bytes = path.bucket_bytes
+    bucketed = bool(bucket_bytes > 0 and rc.comm.mode == "hierarchical"
+                    and zero)
+    supports_flush = "flush_segments" in inspect.signature(
+        model.loss).parameters
+    use_flush = bool(bucketed and supports_flush
+                     and rc.comm.compress == "none")
+    stacked_tree = {k: jax.tree.map(lambda pd: k == "blocks", v,
+                                    is_leaf=is_pd_leaf)
+                    for k, v in defs.items()}
+    plan = None
+    stacked_flags = None
+    if bucketed:
+        eff_leaves, eff_dims = _eff_grad_leaves(defs, dims,
+                                                data_size if zero else 1)
+        raw_flags = [bool(f) for f in jax.tree.leaves(stacked_tree)]
+        stacked_flags = (raw_flags if use_flush
+                         else bk.bucketable_flags(eff_leaves, raw_flags,
+                                                  eff_dims))
+        plan = bk.plan_buckets(eff_leaves, stacked_flags, bucket_bytes)
+        if not plan.layer_buckets:
+            bucketed = use_flush = False
+            plan = stacked_flags = None
+
     replan = None
     if rc.comm.mode != "flat":
         # telemetry: the per-step traffic plan is known at build time (f32
@@ -230,34 +278,64 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
         # cross-pod stage.  The bundle keeps the note as `replan` so a
         # trainer swapping back to a cached bundle can refresh the registry.
         replan = functools.partial(_note_path_plan, defs, dims, path,
-                                   data_size if zero else 1,
-                                   int(mesh.shape.get("pod", 1)))
+                                   data_size if zero else 1, pod_world,
+                                   stacked_flags=stacked_flags,
+                                   window=window, m_micro=m_micro)
         replan()
 
     gather_layer, gather_top = _make_gather(defs, dims, zero, "data" in manual)
     dp_world = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
     dims_or_none = dims if zero else nones
-    tc = rc.train
-    m_micro = max(1, tc.microbatches)
+
+    def _tp_wrapped(fn, specs):
+        """Run a cross-pod sync under a fully-manual {"model"} shard_map
+        when the wire is compressed and TP is real: quantize/pad/gather ops
+        would otherwise let GSPMD replicate the "model"-sharded dims (§Perf
+        P8: 16x inflation)."""
+        if rc.comm.compress == "none" or tp <= 1:
+            return fn
+        tp_specs = jax.tree.map(lambda s: _manual_part(s, {"model"}), specs,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        def wrapped(g):
+            inner = jax.shard_map(fn, in_specs=(tp_specs,),
+                                  out_specs=tp_specs,
+                                  axis_names={"model"}, check_vma=False)
+            return inner(g)
+        return wrapped
 
     def _cross_pod(grads):
-        if rc.comm.compress == "none" or tp <= 1:
-            return streamed_psum(grads, path, dims=dims,
-                                 site_groups=site_groups)
-        # compressed transfers quantize/pad/gather — GSPMD propagation
-        # through those ops replicates the "model"-sharded dims (§Perf P8:
-        # 16x inflation); a nested fully-manual shard_map keeps every byte
-        # of the compressed path local.
-        grad_param_specs = param_specs
-        tp_specs = jax.tree.map(lambda s: _manual_part(s, {"model"}),
-                                grad_param_specs,
-                                is_leaf=lambda x: isinstance(x, P))
-        inner = jax.shard_map(
-            lambda g: streamed_psum(g, path, dims=dims,
-                                    site_groups=site_groups),
-            in_specs=(tp_specs,), out_specs=tp_specs,
-            axis_names={"model"}, check_vma=False)
-        return inner(grads)
+        if bucketed and not use_flush:
+            # tail-mode buckets: one streamed psum per layer bucket, so the
+            # bucketed optimizer below can start on bucket k while bucket
+            # k+1's transfer is still in flight
+            fn = lambda g: bk.bucketed_sync(g, path, stacked=stacked_tree,
+                                            dims=dims,
+                                            site_groups=site_groups)
+        else:
+            fn = lambda g: streamed_psum(g, path, dims=dims,
+                                         site_groups=site_groups)
+        return _tp_wrapped(fn, param_specs)(grads)
+
+    rest_keys = tuple(k for k in defs if k != "blocks")
+
+    def _sync_rest(grads):
+        """Flush mode: blocks grads were synced during backprop by the
+        segment hooks — only the top-level leaves (embed/head/norms/encoder,
+        the rest bucket) still need the in-pod reduction + cross-pod psum."""
+        rest = {k: grads[k] for k in rest_keys}
+        rest_dims = {k: dims[k] for k in rest_keys}
+        if "data" in manual:
+            rest = _map_with_dims(
+                lambda g, d: jax.lax.psum(g, "data") if d in (None, NOFSDP) else g,
+                rest, rest_dims)
+        rest_specs = {k: param_specs[k] for k in rest_keys}
+        rest_bkt = len(plan.layer_buckets)
+        fn = lambda g: streamed_psum(g, path, dims=rest_dims,
+                                     site_groups=site_groups,
+                                     tel_key=f"{path.key}/bkt{rest_bkt}")
+        synced = _tp_wrapped(fn, rest_specs)(rest)
+        return {**synced, "blocks": grads["blocks"]}
 
     def sync(grads):
         if rc.comm.mode == "flat":
@@ -266,6 +344,8 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
             return gateway_allreduce(grads, path, ("data",))
         # hierarchical: replicated leaves still need the in-pod reduction
         if zero:
+            if use_flush:
+                return _sync_rest(grads)
             if "data" in manual:
                 grads = _map_with_dims(
                     lambda g, d: jax.lax.psum(g, "data") if d in (None, NOFSDP) else g,
@@ -275,8 +355,15 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
         return hierarchical_allreduce(grads, path, ("data",), dims,
                                       site_groups=site_groups)
 
+    flush_segments = _make_flush_segments(
+        defs, dims, path, plan, site_groups, manual,
+        data_size if zero else 1) if use_flush else None
+
     def loss_fn(params, mb):
         p = gather_top(params)
+        if flush_segments is not None:
+            return model.loss(p, mb, gather=gather_layer,
+                              flush_segments=flush_segments)
         return model.loss(p, mb, gather=gather_layer)
 
     _vg = jax.value_and_grad(loss_fn, has_aux=True)
@@ -298,9 +385,13 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
             sync=sync, dims=dims_or_none, overlap=m_micro > 1)
         grads = jax.tree.map(lambda g: g / dp_world, grads)
         lr = lr_at(state["opt"]["step"], tc)
+        # bucketed: update(bucket k) depends only on sync(bucket k) + the
+        # clip-norm scalar, so the optimizer interleaves with in-flight
+        # sync buckets instead of waiting for the whole tree
         new_params, new_opt, stats = adamw_update(
             grads, state["opt"], params, tc, lr,
-            dims=dims_or_none, data_axes=dp)
+            dims=dims_or_none, data_axes=dp,
+            buckets=plan, stacked=stacked_flags)
         if manual:
             loss = jax.lax.psum(loss, tuple(manual)) / dp_world
         out_metrics = {"loss": loss, "lr": lr, **stats,
@@ -334,7 +425,8 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
         donate_argnums=(0,))
     return StepBundle(fn=fn, mesh=mesh, model=model, param_defs=defs,
                       state_specs=state_specs, batch_specs=batch_specs,
-                      dims=dims_or_none, zero=zero, path=path, replan=replan)
+                      dims=dims_or_none, zero=zero, path=path, replan=replan,
+                      bucket_plan=plan, compute_window=window)
 
 
 def _batch_template(rc: RunConfig) -> dict:
@@ -353,17 +445,10 @@ def _param_bytes(defs) -> int:
     return total
 
 
-def _note_path_plan(defs, dims, path: WidePath, shard: int,
-                    world: int = 1) -> None:
-    """Record the path's static gradient-sync plan into telemetry.
-
-    Mirrors what streamed_psum will see: gradients are f32 on the wire, and
-    under ZeRO each scatterable leaf crosses pods as a 1/shard slice;
-    `world` (the pod-axis size) feeds the modeled per-pod wire bytes of the
-    configured (algo, compress).
-    """
-    from repro.core import streams as st
-    from repro.core import telemetry as tel
+def _eff_grad_leaves(defs, dims, shard: int):
+    """(abstract leaves, effective scatter dims) of the cross-pod gradient
+    payload: f32 on the wire, ZeRO leaves scattered over "data" as 1/shard
+    slices — exactly what streamed_psum sees."""
     leaves = jax.tree.leaves(tree_abstract(defs))
     dim_leaves = jax.tree.leaves(dims, is_leaf=lambda x: x is None)
     eff_leaves, eff_dims = [], []
@@ -374,6 +459,69 @@ def _note_path_plan(defs, dims, path: WidePath, shard: int,
             shape[d] //= shard
         eff_leaves.append(jax.ShapeDtypeStruct(tuple(shape), jnp.float32))
         eff_dims.append(d if (d is not None and len(shape)) else None)
+    return eff_leaves, eff_dims
+
+
+def _make_flush_segments(defs, dims, path: WidePath, plan, site_groups,
+                         manual, shard: int):
+    """(layer bounds, per-bucket flush hooks) for the segmented layer scan.
+
+    Each hook is a custom_vjp identity around one bucket's stacked-param
+    slice; its backward casts the bucket's gradients to the f32 wire dtype,
+    does the in-pod reduction for replicated leaves, and issues the bucket's
+    cross-pod streamed psum under ``{key}/bkt{i}`` — at that point the
+    backward of earlier layers has not run yet, so the transfer overlaps it.
+    Chunk geometry is pinned to the *full* leaf's rows so bucketing leaves
+    quantization blocks (int8 wire) unchanged.
+    """
+    from repro.core import streams as st
+    blocks_eff, blocks_dims = _eff_grad_leaves(defs["blocks"], dims["blocks"],
+                                               shard)
+    blocks_ndims = st.normalize_dims(blocks_eff, blocks_dims)
+    rows_full = [st.chunk_rows(x, d, path.chunk_bytes)
+                 for x, d in zip(blocks_eff, blocks_ndims)]
+    index_of = {(b.lo, b.hi): b.index for b in plan.layer_buckets}
+
+    def make_sync(bi: int):
+        def sync_seg(g):
+            leaves, td = jax.tree.flatten(g)
+            gf = [l.astype(jnp.float32) for l in leaves]
+            if "data" in manual:
+                gf = [jax.lax.psum(l, "data") if d is None else l
+                      for l, d in zip(gf, blocks_dims)]
+            chunks = st.plan_chunks(gf, blocks_ndims, path.chunk_bytes,
+                                    rows=rows_full)
+            synced = streamed_psum(gf, path, dims=blocks_dims,
+                                   site_groups=site_groups,
+                                   tel_key=f"{path.key}/bkt{bi}",
+                                   chunks=chunks)
+            return jax.tree.unflatten(
+                td, [s.astype(l.dtype) for s, l in zip(synced, leaves)])
+        return sync_seg
+
+    bounds = plan.layer_bounds
+    hooks = [flush_hook(make_sync(index_of[b])) for b in bounds]
+    return bounds, hooks
+
+
+def _note_path_plan(defs, dims, path: WidePath, shard: int,
+                    world: int = 1, *, stacked_flags=None,
+                    window: float = 0.0, m_micro: int = 1) -> None:
+    """Record the path's static gradient-sync plan into telemetry.
+
+    Mirrors what streamed_psum will see: gradients are f32 on the wire, and
+    under ZeRO each scatterable leaf crosses pods as a 1/shard slice;
+    `world` (the pod-axis size) feeds the modeled per-pod wire bytes of the
+    configured (algo, compress).  With `stacked_flags` (bucketed overlap on)
+    per-bucket plans land under ``{key}/bkt{i}``; `window` (modeled
+    overlappable compute seconds per microbatch) feeds the ``exposed_s`` /
+    ``overlapped_s`` overlap note — single-pod builds model the configured
+    inter-pod link at the minimal 2-pod deployment.
+    """
+    from repro.core import streams as st
+    from repro.core import telemetry as tel
+    from repro.core.overlap import modeled_exposure
+    eff_leaves, eff_dims = _eff_grad_leaves(defs, dims, shard)
     chunks = st.plan_chunks(eff_leaves, eff_dims, path.chunk_bytes)
     buckets = st.assign_streams(chunks, path.streams)
     tel.note_plan(path.key, **st.plan_summary(
@@ -382,6 +530,17 @@ def _note_path_plan(defs, dims, path: WidePath, shard: int,
     if path.hops:
         from repro.core.collectives import _note_hop_plans
         _note_hop_plans(path, eff_leaves, eff_dims)
+    if stacked_flags is not None and path.bucket_bytes > 0:
+        bk.note_bucket_plans(path, eff_leaves, eff_dims, None,
+                             world=world, flags=stacked_flags)
+    res = modeled_exposure(
+        sum(st.leaf_bytes(x) for x in eff_leaves), path.link,
+        streams=path.streams, chunk_bytes=path.chunk_bytes,
+        pacing=path.comm.pacing, compute_window=window,
+        bucket_bytes=path.bucket_bytes if stacked_flags is not None else 0,
+        microbatches=m_micro, world=max(2, world),
+        algo=path.comm.algo, compress=path.comm.compress)
+    tel.note_overlap(path.key, res["exposed_s"], res["overlapped_s"])
 
 
 # ---------------------------------------------------------------------------

@@ -94,16 +94,26 @@ class Trainer:
         self._fresh_compile = True
         if autotune_every and rc.comm.autotune and rc.comm.mode != "flat":
             p = self.bundle.path
+            # probe bucket_mb only when this config can actually bucket
+            # (hierarchical + ZeRO + stacked blocks — bundle built a plan
+            # or would on a nonzero knob); otherwise every bucket probe
+            # would pay a full XLA recompile for a bit-identical executable
+            can_bucket = (self.bundle.bucket_plan is not None
+                          or (p.comm.bucket_mb == 0.0 and self.bundle.zero
+                              and p.comm.mode == "hierarchical"))
             self.tuner = OnlineTuner(streams=p.streams,
                                      chunk_mb=p.comm.chunk_mb,
                                      pacing=p.comm.pacing,
                                      algo=p.comm.algo,
+                                     bucket_mb=p.comm.bucket_mb,
+                                     tune_bucket=can_bucket,
                                      window=autotune_every)
             cfg0 = self.tuner.config()
             if (cfg0["streams"] == p.streams
                     and cfg0["chunk_mb"] == p.comm.chunk_mb
                     and cfg0["pacing"] == p.comm.pacing
-                    and cfg0["algo"] == p.comm.algo):
+                    and cfg0["algo"] == p.comm.algo
+                    and cfg0.get("bucket_mb", p.comm.bucket_mb) == p.comm.bucket_mb):
                 self._bundles[self._cfg_key(cfg0)] = self.bundle
 
     def _ckpt_transfer(self, replica_dir):
@@ -224,7 +234,7 @@ class Trainer:
     @staticmethod
     def _cfg_key(cfg: dict) -> tuple:
         return (cfg["streams"], cfg["chunk_mb"], cfg["pacing"],
-                cfg.get("algo", "psum"))
+                cfg.get("algo", "psum"), cfg.get("bucket_mb", 0.0))
 
     def _retune(self, cfg: dict, log: Callable[[str], None] = print) -> None:
         """Apply a controller-proposed path config: swap to the (cached or
@@ -250,7 +260,8 @@ class Trainer:
         get_telemetry().path(self.bundle.path.key).note_retune(self.step, cfg)
         log(f"[autotune] step {self.step}: trying streams={cfg['streams']} "
             f"chunk={cfg['chunk_mb']}MiB pacing={cfg['pacing']}"
-            + (f" algo={cfg['algo']}" if "algo" in cfg else ""))
+            + (f" algo={cfg['algo']}" if "algo" in cfg else "")
+            + (f" bucket={cfg['bucket_mb']}MiB" if "bucket_mb" in cfg else ""))
 
     def _recover(self):
         # has_checkpoint, not latest_step: mid-run recovery may also restore

@@ -10,8 +10,9 @@ from __future__ import annotations
 import pytest
 
 from repro.core.api import MPW
-from repro.core.autotune import (ALGO_GRID, CHUNK_GRID_MB, STREAM_GRID,
-                                 OnlineTuner, simulate_transfer_s)
+from repro.core.autotune import (ALGO_GRID, BUCKET_GRID_MB, CHUNK_GRID_MB,
+                                 STREAM_GRID, OnlineTuner,
+                                 simulate_transfer_s)
 from repro.core.path import ICI, WAN_LONDON_POZNAN, WidePath
 from repro.core.telemetry import Telemetry, get_telemetry
 
@@ -80,7 +81,7 @@ def test_tuner_mechanics():
     tuner = OnlineTuner(streams=32, chunk_mb=8.0, pacing=1.0, window=2,
                         warmup=0)
     incumbent = {"streams": 32, "chunk_mb": 8.0, "pacing": 1.0,
-                 "algo": "psum"}
+                 "algo": "psum", "bucket_mb": 0.0}
     assert tuner.config() == incumbent
     # off-grid warm starts are kept exact (inserted as grid points), so the
     # incumbent is the config actually running
@@ -100,6 +101,7 @@ def test_tuner_mechanics():
             assert cfg["streams"] in STREAM_GRID
             assert cfg["chunk_mb"] in CHUNK_GRID_MB
             assert cfg["algo"] in ALGO_GRID
+            assert cfg["bucket_mb"] in BUCKET_GRID_MB
     # constant cost everywhere -> nothing beats the incumbent -> revert
     assert tuner.converged
     assert tuner.config() == tuner.best_config() == incumbent
