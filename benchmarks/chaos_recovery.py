@@ -1,0 +1,163 @@
+"""Chaos recovery latency — detect / re-route / recover on the CosmoGrid star.
+
+Drives the real `ChaosMonitor` control loop (detector thresholds, topology
+replan, incident log) against a stub trainer — the response path is
+identical to the `Trainer(chaos=...)` wiring but needs no devices, so the
+benchmark measures pure control-plane latency in *steps*:
+
+  * the amsterdam->tokyo lightpath drops mid-run;
+  * the monitor's per-hop telemetry collapses to the watchdog timeout;
+  * detection fires after the consecutive-anomaly window, the route
+    replans over the edinburgh backup, and recovery is declared after the
+    post-heal window.
+
+A healed mpw-cp transfer over the same dead link reports the data-plane
+cost: chunk requeue count and wire-byte overhead of the bytes burned on
+the dead hop.
+
+Acceptance (asserted below): detection within the detector window of the
+injection, a replanned route that avoids the dead link, and a recovery
+latency covering inject -> detect -> heal.  `benchmarks/run.py --json`
+exports RESULTS (section `chaos_recovery`); run as a module with a path
+argument to dump the incident timeline JSON (the CI chaos artifact).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from types import SimpleNamespace
+
+from repro.configs.base import CommConfig
+from repro.core import (
+    ChaosDetector,
+    ChaosMonitor,
+    cosmogrid_topology,
+    get_incident_log,
+    get_telemetry,
+    healing_transfer,
+)
+from repro.core.path import WidePath
+
+DRY = bool(os.environ.get("WIDEJAX_BENCH_DRY"))
+STEPS = 12 if DRY else 40
+FAULT_AT = 5 if DRY else 10
+PAYLOAD = (1 << 19) if DRY else (1 << 21)
+
+# machine-readable section results, exported by benchmarks/run.py --json
+RESULTS: dict = {}
+TIMELINE: list = []
+
+
+class _StubTrainer:
+    """The slice of the Trainer interface ChaosMonitor drives: a live
+    route compiled to a WidePath, and the two healing responses."""
+
+    def __init__(self, route):
+        self.step = 0
+        self.tuner = None
+        self._rebuild(route)
+
+    def _rebuild(self, route):
+        self.route = route
+        path = WidePath(axis="pod", name="bench-chaos")
+        if route is not None:
+            path = path.with_hops(route.as_hops())
+        self.bundle = SimpleNamespace(path=path)
+
+    def apply_route(self, new_route, log=print):
+        self._rebuild(new_route)
+
+    def failover_to_replica(self, log=print) -> str:
+        self._rebuild(None)
+        return "degraded"
+
+
+def _control_loop() -> dict:
+    log = get_incident_log()
+    log.clear()
+    t = cosmogrid_topology(backup_links=True)
+    t.connect("amsterdam", "tokyo",
+              t.link("amsterdam", "tokyo").drop(FAULT_AT))
+    mon = ChaosMonitor(t, "amsterdam", "tokyo",
+                       detector=ChaosDetector(window=2, min_baseline=2),
+                       recover_after=2, payload_bytes=64 << 20)
+    tr = _StubTrainer(t.route("amsterdam", "tokyo"))
+    routed_healthy = 0
+    for s in range(STEPS):
+        tr.step = s
+        mon.on_step(tr, log=lambda m: None)
+        if tr.route is not None and all(
+                not p.health(s).faulty for p in tr.route.profiles):
+            routed_healthy += 1
+    ev = {e.kind: e for e in log.events()}
+    assert "inject" in ev and "detect" in ev and "replan" in ev, log.events()
+    assert "recover" in ev, "no recovery within the run"
+    assert "tokyo-edinburgh-backup" in ev["replan"].detail["route"]
+    detect_steps = ev["detect"].step - ev["inject"].step
+    assert detect_steps <= mon.detector.window
+    recover_steps = int(ev["recover"].detail["latency_steps"])
+    assert recover_steps > 0
+    TIMELINE[:] = log.timeline()
+    return {"time_to_detect_steps": detect_steps,
+            "time_to_recover_steps": recover_steps,
+            "routed_uptime_efficiency": routed_healthy / STEPS,
+            "final_route": list(tr.route.sites)}
+
+
+def _healed_transfer() -> dict:
+    get_telemetry().reset()
+    t = cosmogrid_topology(backup_links=True)
+    t.connect("amsterdam", "tokyo", t.link("amsterdam", "tokyo").drop(0))
+    eng = healing_transfer(t, "amsterdam", "tokyo",
+                           comm=CommConfig(streams=4, chunk_mb=0.0625),
+                           max_retries=1)
+    with tempfile.TemporaryDirectory() as d:
+        src, dst = os.path.join(d, "a"), os.path.join(d, "b")
+        with open(src, "wb") as f:
+            f.write(os.urandom(PAYLOAD))
+        res = eng.copy(src, dst)
+    assert res.reroutes == 1 and res.wire_bytes >= res.nbytes
+    return {"heal_reroutes": res.reroutes,
+            "heal_wire_overhead": res.wire_bytes / res.nbytes}
+
+
+def run() -> str:
+    ctl = _control_loop()
+    xfer = _healed_transfer()
+    RESULTS.update(ctl)
+    RESULTS.update(xfer)
+    lines = [
+        "## Chaos recovery: lightpath drop on the CosmoGrid star",
+        "",
+        f"{STEPS} steps, fault injected at step {FAULT_AT}; detector "
+        "window 2, post-heal window 2.",
+        "",
+        "| metric | value |",
+        "|---|---|",
+        f"| time to detect | {ctl['time_to_detect_steps']} steps |",
+        f"| time to recover (inject -> healthy) | "
+        f"{ctl['time_to_recover_steps']} steps |",
+        f"| routed-uptime efficiency | "
+        f"{ctl['routed_uptime_efficiency']:.2f} |",
+        f"| healed route | {' -> '.join(ctl['final_route'])} |",
+        f"| mpw-cp reroutes on dead link | {xfer['heal_reroutes']} |",
+        f"| mpw-cp wire overhead (burned bytes) | "
+        f"{xfer['heal_wire_overhead']:.2f}x |",
+        "",
+        "Incident timeline (also the CI chaos artifact):",
+        "",
+        get_incident_log().format_timeline(),
+    ]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    print(run())
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump({"timeline": TIMELINE, "results": RESULTS}, f,
+                      indent=2, default=float)
+        print(f"\n(timeline written to {sys.argv[1]})")

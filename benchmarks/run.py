@@ -24,7 +24,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,bloodflow,overlap,streams,"
-                         "autotune,multihop,ring,filetransfer,roofline")
+                         "autotune,multihop,ring,filetransfer,"
+                         "chaos_recovery,roofline")
     ap.add_argument("--dry", action="store_true",
                     help="tiny payloads / few iterations (CI smoke mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -46,6 +47,8 @@ def main():
         "ring": ("benchmarks.ring_vs_gather", "ring vs gather collectives"),
         "filetransfer": ("benchmarks.filetransfer",
                          "WAN file transfer (mpw-cp) over WidePath"),
+        "chaos_recovery": ("benchmarks.chaos_recovery",
+                           "chaos detection & recovery latency"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)

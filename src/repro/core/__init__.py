@@ -10,6 +10,14 @@ from repro.core.autotune import (  # noqa: F401
     simulate_transfer_s,
     tune,
 )
+from repro.core.chaos import (  # noqa: F401
+    ChaosDetector,
+    ChaosMonitor,
+    IncidentLog,
+    get_incident_log,
+    healing_transfer,
+    link_fault_hook,
+)
 from repro.core.buckets import (  # noqa: F401
     Bucket,
     BucketPlan,
@@ -58,7 +66,9 @@ from repro.core.ring import (  # noqa: F401
 from repro.core.telemetry import PathTelemetry, Telemetry, get_telemetry  # noqa: F401
 from repro.core.topology import (  # noqa: F401
     LAN,
+    Fault,
     Forwarder,
+    LinkHealth,
     LinkProfile,
     Route,
     Site,

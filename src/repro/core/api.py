@@ -251,9 +251,31 @@ class MPW:
 
     def Report(self, formatted: bool = False):
         """All per-path stats recorded in this process (facade paths and the
-        runtime loops' train/serve paths alike)."""
+        runtime loops' train/serve paths alike).  The formatted report
+        appends the incident timeline whenever the chaos layer recorded one
+        (fault injected -> detected -> action -> recovery latency), so one
+        artifact carries both the throughput story and the root cause."""
         t = get_telemetry()
-        return t.format_report() if formatted else t.report()
+        if not formatted:
+            return t.report()
+        out = t.format_report()
+        from repro.core.chaos import get_incident_log
+        log = get_incident_log()
+        if log.events():
+            out += "\n\n**Incidents**\n\n" + log.format_timeline()
+        return out
+
+    def Incidents(self, clear: bool = False):
+        """The chaos incident timeline as JSON-friendly rows ({step, event,
+        subject, detail}): every injected fault and every automatic
+        response — detect, replan, retune, requeue, failover, recover (with
+        `latency_steps`).  `clear=True` drains the log after reading."""
+        from repro.core.chaos import get_incident_log
+        log = get_incident_log()
+        rows = log.timeline()
+        if clear:
+            log.clear()
+        return rows
 
     # -- data movement ------------------------------------------------------
     def Send(self, pid: int, tree, shift: int = 1, dims=None):

@@ -203,6 +203,7 @@ class OnlineTuner:
         self._samples: list[float] = []
         self._skip = self.warmup      # drop compile/post-change cost spikes
         self._moves: list[dict] = []
+        self._probe: Optional[dict] = None   # move applied but not yet judged
 
     # -- public -------------------------------------------------------------
     def _active(self) -> tuple:
@@ -262,8 +263,29 @@ class OnlineTuner:
         self._samples.clear()
         return self._decide(cost)
 
+    def abort_probe(self) -> Optional[dict]:
+        """Revert an in-flight probe after a path fault.
+
+        A probe's cost window measured on a dying path says nothing about
+        the probed config: without this revert, a fault mid-probe leaves
+        the (possibly losing) probed knobs pinned on the path while the
+        tuner's incumbent still points at the old config.  Clears the
+        corrupted samples, re-queues the aborted move for a clean re-probe
+        after recovery, and returns the incumbent knobs to re-apply — or
+        None when the path is already running the incumbent."""
+        self._samples.clear()
+        self._skip = self.warmup
+        if self._probe is not None:
+            self._moves.insert(0, self._probe)
+            self._probe = None
+        if self.idx == self.best_idx:
+            return None
+        self.idx = dict(self.best_idx)
+        return self.config()
+
     # -- climb mechanics ----------------------------------------------------
     def _decide(self, cost: float) -> Optional[dict]:
+        self._probe = None            # the probe's window completed cleanly
         self.history.append((self.config(), cost))
         improved = (self.best_cost is None
                     or cost < self.best_cost * (1.0 - self.rel))
@@ -297,6 +319,7 @@ class OnlineTuner:
             for k, d in mv.items():
                 self.idx[k] += d
             self._skip = self.warmup
+            self._probe = mv
             return self.config()
         # no untried neighbour beats the incumbent: settle on it
         self.converged = True
@@ -364,6 +387,17 @@ class RouteTuner:
                 out[i] = cfg
         return out
 
+    def abort_probe(self) -> dict:
+        """Revert any in-flight probe on every hop (a route fault corrupts
+        every hop's attributed cost window, not just the dead hop's).
+        Returns {hop index: incumbent knobs} for hops that were probing."""
+        out: dict[int, dict] = {}
+        for i, t in enumerate(self.tuners):
+            cfg = t.abort_probe()
+            if cfg is not None:
+                out[i] = cfg
+        return out
+
 
 # ---------------------------------------------------------------------------
 # synthetic link: a measurement generator for convergence tests/benchmarks
@@ -414,3 +448,34 @@ def simulate_transfer_s(nbytes: float, link: LinkSpec, *, streams: int,
 def _lcg01(seed: int) -> float:
     """Deterministic uniform [0,1) from an integer seed."""
     return ((1103515245 * (seed + 12345) + 12345) % (1 << 31)) / float(1 << 31)
+
+
+def simulate_hop_s(nbytes: float, profile, step: int, *,
+                   streams: Optional[int] = None,
+                   chunk_bytes: Optional[float] = None,
+                   pacing: Optional[float] = None,
+                   timeout_s: float = 30.0,
+                   jitter: float = 0.0, seed: int = 0) -> float:
+    """Fault-aware wall seconds for one hop of a route at training `step`.
+
+    Applies the :class:`~repro.core.topology.LinkProfile` fault schedule to
+    the synthetic landscape: a dead link models as a transfer that hangs
+    until `timeout_s` (what the watchdog on a real socket would report); a
+    degraded link as proportionally less capacity.  This is how scheduled
+    faults surface as *telemetry* — achieved-GB/s collapse the chaos
+    detector can see — rather than as out-of-band flags."""
+    health = profile.health(step)
+    if not health.alive:
+        return float(timeout_s)
+    link = profile.spec
+    if health.bandwidth_factor < 1.0:
+        link = LinkSpec(link.name, link.latency_s,
+                        max(1.0, link.bandwidth_Bps * health.bandwidth_factor),
+                        link.window)
+    return simulate_transfer_s(
+        float(nbytes), link,
+        streams=profile.streams if streams is None else streams,
+        chunk_bytes=(profile.chunk_mb * (1 << 20) if chunk_bytes is None
+                     else chunk_bytes),
+        pacing=profile.pacing if pacing is None else pacing,
+        jitter=jitter, seed=seed + step)

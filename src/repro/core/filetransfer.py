@@ -127,6 +127,11 @@ class FileResult:
     modeled_s: float = 0.0        # store-and-forward sum of hop times
     hop_modeled_s: list = field(default_factory=list)
     sha256: str = ""              # destination digest ("" when digest=False)
+    reroutes: int = 0             # mid-job route replans (chaos healing)
+    # one entry per abandoned route: {"route", "hop_wire_bytes",
+    # "failed_hop"} — wire bytes spent on a route that died mid-job still
+    # count toward wire_bytes (the link carried them)
+    reroute_history: list = field(default_factory=list)
 
     @property
     def resumed(self) -> bool:
@@ -141,14 +146,29 @@ class FileTransfer:
     simulate an interrupt); `tuner` attaches an online controller that
     re-tunes ``self.path`` from modeled job times; `record=False` silences
     telemetry (the local mirror fallback).
+
+    `reroute(engine, failed_hop) -> bool` is the self-healing hook: when a
+    chunk exhausts its CRC retries (a hop is corrupting or dead), the
+    engine calls it once per failure epoch.  The callback may replan the
+    route — mutate ``engine.path`` (and ``engine.fault_hook``) to the new
+    route — and return True; the failing chunk and every not-yet-shipped
+    chunk then requeue onto the replanned route (in-flight chunks finish
+    their current attempt and requeue on their next failure).  Returning
+    False, or `reroute=None`, propagates :class:`ChecksumError` as before.
+    At most `max_reroutes` replans per job.  Reroute is not supported for
+    ``reverse`` transfers.
     """
 
     def __init__(self, path: WidePath, *, tuner: Optional[OnlineTuner] = None,
                  compress: Optional[str] = None, max_retries: int = 3,
                  record: bool = True, digest: bool = True,
-                 fault_hook: Optional[Callable] = None) -> None:
+                 fault_hook: Optional[Callable] = None,
+                 reroute: Optional[Callable] = None,
+                 max_reroutes: int = 2) -> None:
         self.path = path
         self.tuner = tuner
+        self.reroute = reroute
+        self.max_reroutes = max(0, int(max_reroutes))
         self.max_retries = max(0, int(max_retries))
         self.record = record
         # digest=False skips the whole-file sha256 re-read at finalize
@@ -205,39 +225,61 @@ class FileTransfer:
         os.makedirs(os.path.dirname(os.path.abspath(job.dst)), exist_ok=True)
         self._ensure_part(part, job.nbytes)
         lock = threading.Lock()
+        # mutable route state shared by the streams: a reroute bumps `epoch`
+        # and swaps route/hop_order; chunks that fail re-read it and requeue
+        ctx = {"epoch": 0, "reroutes": 0, "route": route,
+               "hop_order": hop_order, "reverse": reverse}
 
         def ship(c: Chunk) -> None:
-            for _attempt in range(self.max_retries + 1):
-                try:
-                    with open(job.src, "rb") as f:
-                        f.seek(c.start)
-                        payload = f.read(c.size)
-                except FileNotFoundError:
-                    self._abort(job.dst)   # source vanished: no resume state
-                    raise
-                crc = zlib.crc32(payload)
-                ok = True
-                for i in hop_order:       # store-and-forward across the route
-                    wire = (zlib.compress(payload, 1)
-                            if self._compress == "zlib" else payload)
-                    with lock:
-                        res.hop_wire_bytes[i] += len(wire)
-                    recv = (zlib.decompress(wire)
-                            if self._compress == "zlib" else wire)
-                    if self.fault_hook is not None:
-                        recv = self.fault_hook(c, i, recv)
-                    if zlib.crc32(recv) != crc:   # relay verifies per hop
-                        ok = False
+            while True:
+                with lock:
+                    my_epoch = ctx["epoch"]
+                    order_now = list(ctx["hop_order"])
+                    # hold the *list object*: after a reroute archives it,
+                    # stragglers still account their bytes against the
+                    # abandoned route rather than the fresh arrays
+                    hw = res.hop_wire_bytes
+                path_now = self.path
+                failed_hop = order_now[0] if order_now else 0
+                for _attempt in range(self.max_retries + 1):
+                    try:
+                        with open(job.src, "rb") as f:
+                            f.seek(c.start)
+                            payload = f.read(c.size)
+                    except FileNotFoundError:
+                        self._abort(job.dst)  # source vanished: no resume
+                        raise
+                    crc = zlib.crc32(payload)
+                    ok = True
+                    for i in order_now:   # store-and-forward across route
+                        wire = (zlib.compress(payload, 1)
+                                if self._compress == "zlib" else payload)
                         with lock:
-                            res.retries += 1
+                            hw[i] += len(wire)
+                        recv = (zlib.decompress(wire)
+                                if self._compress == "zlib" else wire)
+                        if self.fault_hook is not None:
+                            recv = self.fault_hook(c, i, recv)
+                        if zlib.crc32(recv) != crc:  # relay verifies per hop
+                            ok = False
+                            failed_hop = i
+                            with lock:
+                                res.retries += 1
+                            if self.record:
+                                tel.note_checksum_error(path_now.hop_key(i))
+                            break
+                        payload = recv
+                    if ok:
                         break
-                    payload = recv
-                if ok:
-                    break
-            else:
-                raise ChecksumError(
-                    f"chunk {c.leaf} of {job.src} failed CRC "
-                    f"{self.max_retries + 1} times")
+                else:
+                    # CRC retries exhausted on this route: heal or give up
+                    if self._advance_route(ctx, res, my_epoch, failed_hop,
+                                           lock):
+                        continue      # requeue onto the replanned route
+                    raise ChecksumError(
+                        f"chunk {c.leaf} of {job.src} failed CRC "
+                        f"{self.max_retries + 1} times")
+                break
             with open(part, "r+b") as f:
                 f.seek(c.start)
                 f.write(payload)
@@ -289,8 +331,38 @@ class FileTransfer:
         except OSError:
             pass
         self._remove_sidecar(job.dst)
-        self._account(job, res, route, hop_order, record_total)
+        self._account(job, res, ctx["route"], ctx["hop_order"], record_total)
         return res
+
+    def _advance_route(self, ctx: dict, res: FileResult, my_epoch: int,
+                       failed_hop: int, lock) -> bool:
+        """A chunk exhausted its CRC retries: requeue it onto a healed route.
+
+        Returns True when a newer route is in place — either this call's
+        `reroute` callback replanned one, or a concurrent stream already
+        did (their chunk hit the same dead hop first).  False means no
+        heal is possible and the ChecksumError should propagate."""
+        with lock:
+            if ctx["epoch"] != my_epoch:
+                return True           # another stream already healed
+            if (self.reroute is None or ctx["reverse"]
+                    or ctx["reroutes"] >= self.max_reroutes):
+                return False
+            if not self.reroute(self, failed_hop):
+                return False
+            new_route = self.path.route
+            res.reroutes += 1
+            res.reroute_history.append(
+                {"route": [h.name for h in ctx["route"]],
+                 "failed_hop": failed_hop,
+                 "hop_wire_bytes": res.hop_wire_bytes})
+            res.hop_wire_bytes = [0] * len(new_route)
+            res.hop_modeled_s = [0.0] * len(new_route)
+            ctx["reroutes"] += 1
+            ctx["epoch"] += 1
+            ctx["route"] = new_route
+            ctx["hop_order"] = list(range(len(new_route)))
+            return True
 
     def copy_tree(self, src_dir: str, dst_dir: str, *, resume: bool = True,
                   record_total: bool = True) -> list[FileResult]:
@@ -319,7 +391,8 @@ class FileTransfer:
             res.hop_modeled_s[i] = simulate_transfer_s(
                 res.hop_wire_bytes[i], hop.link, streams=hop.streams,
                 chunk_bytes=self.path.chunk_bytes, pacing=hop.comm.pacing)
-        res.wire_bytes = sum(res.hop_wire_bytes)
+        res.wire_bytes = sum(res.hop_wire_bytes) + sum(
+            sum(h["hop_wire_bytes"]) for h in res.reroute_history)
         res.modeled_s = sum(res.hop_modeled_s)   # store-and-forward: hops add
         if self.record:
             chunks, buckets = list(job.chunks), [list(b) for b in job.buckets]

@@ -70,6 +70,7 @@ class PathTelemetry:
     overlapped_s: Optional[float] = None
     samples: deque = field(default_factory=deque)   # (step, seconds, bytes)
     retunes: list = field(default_factory=list)     # (step, {knob: value})
+    checksum_errors: int = 0      # per-hop CRC failures (chaos signal)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def note_plan(self, **kw) -> None:
@@ -84,6 +85,13 @@ class PathTelemetry:
     def note_retune(self, step: Optional[int], config: dict) -> None:
         with self._lock:
             self.retunes.append((step, dict(config)))
+
+    def note_checksum_error(self, n: int = 1) -> None:
+        """Count a failed per-chunk CRC verification (file transfers check
+        every chunk per hop; a corrupting link shows up here before it
+        shows up as throughput collapse)."""
+        with self._lock:
+            self.checksum_errors += int(n)
 
     def record(self, seconds: float, nbytes: Optional[int] = None,
                step: Optional[int] = None) -> None:
@@ -127,6 +135,7 @@ class PathTelemetry:
                 "total_bytes": self.total_bytes,
                 "total_seconds": self.total_seconds,
                 "retunes": list(self.retunes),
+                "checksum_errors": self.checksum_errors,
             }
             plan = self.plan
             exposed, overlapped = self.exposed_s, self.overlapped_s
@@ -258,3 +267,7 @@ def note_overlap(key: str, exposed_s: float, overlapped_s: float) -> None:
 def record(key: str, seconds: float, nbytes: Optional[int] = None,
            step: Optional[int] = None) -> None:
     _GLOBAL.record(key, seconds, nbytes=nbytes, step=step)
+
+
+def note_checksum_error(key: str, n: int = 1) -> None:
+    _GLOBAL.path(key).note_checksum_error(n)

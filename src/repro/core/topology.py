@@ -14,11 +14,54 @@ whose transfers store-and-forward hop by hop (`repro.core.cycle.forward`).
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, replace
+import math
+from dataclasses import dataclass, field, replace
 from typing import Optional, Sequence
 
 from repro.configs.base import CommConfig
 from repro.core.path import Hop, LinkSpec, WidePath
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault on a link.  Everything is derived from the
+    schedule fields plus `seed`, so a fault run replays bit-identically:
+    the chaos suite's scenarios are scripts, not dice rolls.
+
+    Kinds:
+      * ``"drop"``      — the link is dead for steps in [start, stop).
+      * ``"degrade"``   — bandwidth is multiplied by `factor` and a
+                          deterministic `error_rate` fraction of chunks is
+                          corrupted for steps in [start, stop).
+      * ``"partition"`` — the link is dead *and* `site` is declared
+                          unreachable (whole-site loss: the failover case).
+    """
+    kind: str
+    start: int = 0                 # first step the fault is active
+    stop: Optional[int] = None     # first healed step (None: never heals)
+    factor: float = 1.0            # degrade: bandwidth multiplier in (0, 1]
+    error_rate: float = 0.0        # degrade: fraction of chunks corrupted
+    site: Optional[str] = None     # partition: the site cut off
+    seed: int = 0                  # drives which chunks corrupt
+
+    def active(self, step: int) -> bool:
+        return step >= self.start and (self.stop is None or step < self.stop)
+
+
+@dataclass(frozen=True)
+class LinkHealth:
+    """A link's effective condition at one step: the fold of every active
+    :class:`Fault` on its profile."""
+    alive: bool = True
+    bandwidth_factor: float = 1.0
+    error_rate: float = 0.0
+    partitioned: tuple = ()        # sites the active faults cut off
+    seed: int = 0
+
+    @property
+    def faulty(self) -> bool:
+        return (not self.alive or self.bandwidth_factor < 1.0
+                or self.error_rate > 0.0 or bool(self.partitioned))
 
 
 @dataclass(frozen=True)
@@ -33,6 +76,7 @@ class LinkProfile:
     streams: int = 32
     chunk_mb: float = 8.0
     pacing: float = 1.0
+    faults: tuple = field(default=())   # tuple[Fault, ...], step-scheduled
 
     @property
     def spec(self) -> LinkSpec:
@@ -44,15 +88,72 @@ class LinkProfile:
         return replace(base, streams=self.streams, chunk_mb=self.chunk_mb,
                        pacing=self.pacing)
 
-    def transfer_s(self, nbytes: float) -> float:
+    # -- fault schedule ------------------------------------------------------
+    def with_fault(self, fault: Fault) -> "LinkProfile":
+        return replace(self, faults=self.faults + (fault,))
+
+    def drop(self, at_step: int, until: Optional[int] = None,
+             seed: int = 0) -> "LinkProfile":
+        """Schedule the link to die at `at_step` (heal at `until`, if set)."""
+        return self.with_fault(Fault("drop", start=at_step, stop=until,
+                                     seed=seed))
+
+    def degrade(self, factor: float, window: tuple,
+                error_rate: float = 0.0, seed: int = 0) -> "LinkProfile":
+        """Scale bandwidth by `factor` over steps [window[0], window[1]),
+        corrupting a deterministic `error_rate` fraction of chunks."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"degrade factor must be in (0, 1], got {factor}")
+        return self.with_fault(Fault("degrade", start=window[0],
+                                     stop=window[1], factor=factor,
+                                     error_rate=error_rate, seed=seed))
+
+    def partition(self, site: str, at_step: int = 0,
+                  until: Optional[int] = None, seed: int = 0) -> "LinkProfile":
+        """Schedule a partition: the link dies and `site` is declared lost
+        (distinguishes re-routable hop death from whole-site failover)."""
+        return self.with_fault(Fault("partition", start=at_step, stop=until,
+                                     site=site, seed=seed))
+
+    def health(self, step: int) -> LinkHealth:
+        """Fold every fault active at `step` into one :class:`LinkHealth`."""
+        alive, factor, err = True, 1.0, 0.0
+        parts: list = []
+        seed = 0
+        for f in self.faults:
+            if not f.active(step):
+                continue
+            seed = (seed * 1000003) ^ (f.seed + 77 * f.start + hash(f.kind))
+            if f.kind == "drop":
+                alive = False
+            elif f.kind == "partition":
+                alive = False
+                if f.site:
+                    parts.append(f.site)
+            elif f.kind == "degrade":
+                factor = min(factor, f.factor)
+                err = max(err, f.error_rate)
+            else:
+                raise ValueError(f"unknown fault kind {f.kind!r}")
+        return LinkHealth(alive, factor, err, tuple(parts), seed & 0x7FFFFFFF)
+
+    def transfer_s(self, nbytes: float, step: Optional[int] = None) -> float:
         """Modeled seconds to move `nbytes` over this hop (stream-aware:
-        window-capped links deliver streams * window/RTT up to capacity)."""
+        window-capped links deliver streams * window/RTT up to capacity).
+        With `step`, the fault schedule applies: a dead link models as
+        ``inf``; a degraded one as proportionally less capacity."""
+        bw_factor = 1.0
+        if step is not None:
+            h = self.health(step)
+            if not h.alive:
+                return math.inf
+            bw_factor = h.bandwidth_factor
         if self.window:
             per_stream = self.window / (2 * self.latency_s)
             bw = min(self.bandwidth_Bps, max(1, self.streams) * per_stream)
         else:
             bw = self.bandwidth_Bps
-        return self.latency_s + nbytes / bw
+        return self.latency_s + nbytes / max(1.0, bw * bw_factor)
 
 
 # intra-site fabric: pods at one site talk over the local interconnect
@@ -137,6 +238,7 @@ class Topology:
     def __init__(self) -> None:
         self._sites: dict[str, Site] = {}
         self._links: dict[tuple, LinkProfile] = {}
+        self._down: set[tuple] = set()       # directed (a, b) pairs taken out
         self._next_pod = 0
 
     # -- construction --------------------------------------------------------
@@ -162,6 +264,36 @@ class Topology:
         self._links[(a, b)] = profile
         if bidirectional:
             self._links[(b, a)] = profile
+
+    # -- link liveness (the chaos layer drives these) ------------------------
+    def fail_link(self, a: str, b: str, bidirectional: bool = True) -> None:
+        """Take the a->b link out of route planning (the detector's response
+        to a dead hop).  The profile stays registered for later restore."""
+        if (a, b) not in self._links:
+            raise KeyError(f"no link {a!r} -> {b!r}")
+        self._down.add((a, b))
+        if bidirectional and (b, a) in self._links:
+            self._down.add((b, a))
+
+    def restore_link(self, a: str, b: str, bidirectional: bool = True) -> None:
+        self._down.discard((a, b))
+        if bidirectional:
+            self._down.discard((b, a))
+
+    def fail_site(self, name: str) -> list:
+        """Whole-site loss: every link touching `name` goes down.  Returns
+        the directed pairs taken out."""
+        if name not in self._sites:
+            raise KeyError(f"unknown site {name!r}")
+        hit = [(a, b) for (a, b) in self._links if name in (a, b)]
+        self._down.update(hit)
+        return hit
+
+    def is_down(self, a: str, b: str) -> bool:
+        return (a, b) in self._down
+
+    def down_links(self) -> frozenset:
+        return frozenset(self._down)
 
     # -- accessors -----------------------------------------------------------
     def site(self, name: str) -> Site:
@@ -249,7 +381,7 @@ class Topology:
             if u == dst:
                 break
             for (a, b), prof in self._links.items():
-                if a != u:
+                if a != u or (a, b) in self._down:
                     continue
                 c = merge(cost, prof)
                 if c < best.get(b, float("inf")):
@@ -295,11 +427,16 @@ class Forwarder:
         return self.route.describe()
 
 
-def cosmogrid_topology(pods_per_site: int = 1) -> Topology:
+def cosmogrid_topology(pods_per_site: int = 1,
+                       backup_links: bool = False) -> Topology:
     """The 4-site CosmoGrid-style testbed (arXiv:1101.0605): a star around
     Amsterdam — the 10 Gbps light path to Tokyo, and regular internet to
     Espoo and Edinburgh.  Tokyo<->Espoo has *no* direct link: reaching it is
-    the paper's Forwarder scenario (2 hops via Amsterdam)."""
+    the paper's Forwarder scenario (2 hops via Amsterdam).
+
+    `backup_links=True` adds a slow commodity-internet Tokyo<->Edinburgh
+    link (the chaos scenarios' detour): when the Amsterdam-Tokyo light path
+    dies, routing can heal around it instead of declaring Tokyo lost."""
     t = Topology()
     for name in ("amsterdam", "tokyo", "espoo", "edinburgh"):
         t.add_site(name, n_pods=pods_per_site)
@@ -312,4 +449,8 @@ def cosmogrid_topology(pods_per_site: int = 1) -> Topology:
     t.connect("amsterdam", "edinburgh",
               LinkProfile("ams-edinburgh", 14e-3, 90e6, window=64 << 10,
                           streams=64, chunk_mb=8.0))
+    if backup_links:
+        t.connect("tokyo", "edinburgh",
+                  LinkProfile("tokyo-edinburgh-backup", 160e-3, 60e6,
+                              window=64 << 10, streams=64, chunk_mb=4.0))
     return t

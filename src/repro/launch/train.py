@@ -8,6 +8,9 @@ Examples:
   python -m repro.launch.train --arch qwen1.5-0.5b --steps 100 --smoke
   python -m repro.launch.train --arch llama3.2-3b --shape train_4k \
       --mode hierarchical --streams 32 --ckpt-dir /ckpt --replica-dir /backup
+  # WAN-routed with chaos: drop the direct link at step 20, self-heal
+  python -m repro.launch.train --arch qwen1.5-0.5b --smoke --pods 4 \
+      --route amsterdam:tokyo --backup-links --chaos-drop 20
 """
 from __future__ import annotations
 
@@ -52,6 +55,16 @@ def main():
                     help="reduced model + small shapes for local devices")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod axis of the local mesh (4 for CosmoGrid routes)")
+    ap.add_argument("--route", default=None, metavar="SRC:DST",
+                    help="plan the train path over the CosmoGrid testbed "
+                         "(e.g. amsterdam:tokyo); needs a pod axis of 4")
+    ap.add_argument("--backup-links", action="store_true",
+                    help="add the tokyo-edinburgh backup to the testbed")
+    ap.add_argument("--chaos-drop", type=int, default=None, metavar="STEP",
+                    help="drop the route's direct link at STEP and attach "
+                         "the self-healing ChaosMonitor (re-route/failover)")
     ap.add_argument("--data", default="synthetic", choices=["synthetic", "binary"])
     ap.add_argument("--data-path", default=None)
     args = ap.parse_args()
@@ -70,8 +83,25 @@ def main():
     else:
         n = len(jax.devices())
         model_par = 1
-        data_par = n
-        mesh = make_local_mesh(data=data_par, model=model_par)
+        data_par = n // args.pods
+        mesh = make_local_mesh(data=data_par, model=model_par, pod=args.pods)
+
+    route = site_groups = chaos = None
+    if args.route:
+        from repro.core import ChaosMonitor, cosmogrid_topology
+        src, dst = args.route.split(":")
+        topo = cosmogrid_topology(backup_links=args.backup_links)
+        if args.chaos_drop is not None:
+            direct = topo.link(src, dst)
+            if direct is None:
+                ap.error(f"--chaos-drop needs a direct {src}-{dst} link")
+            topo.connect(src, dst, direct.drop(args.chaos_drop))
+            chaos = ChaosMonitor(topo, src, dst)
+        route = topo.route(src, dst)
+        site_groups = topo.pod_groups()
+        print(f"[train] WAN route: {route.describe()}"
+              + (f"; chaos drop at step {args.chaos_drop}"
+                 if args.chaos_drop is not None else ""))
 
     rc = RunConfig(
         model=cfg, shape=shape,
@@ -87,7 +117,8 @@ def main():
     with jax.set_mesh(mesh):
         trainer = Trainer(rc, mesh, ckpt_dir=args.ckpt_dir,
                           replica_dir=args.replica_dir,
-                          ckpt_every=args.ckpt_every)
+                          ckpt_every=args.ckpt_every,
+                          route=route, site_groups=site_groups, chaos=chaos)
         print(f"[train] {args.arch} params={cfg.param_count():,} mesh={mesh.shape} "
               f"mode={args.mode} zero={trainer.bundle.zero}")
         print(f"[train] {trainer.init_or_restore()} at step {trainer.step}")

@@ -61,7 +61,8 @@ class Trainer:
     def __init__(self, rc: RunConfig, mesh, *, ckpt_dir: Optional[str] = None,
                  replica_dir: Optional[str] = None, ckpt_every: int = 50,
                  keep: int = 3, fault_hook: Optional[Callable[[int], None]] = None,
-                 autotune_every: int = 0, route=None, site_groups=None):
+                 autotune_every: int = 0, route=None, site_groups=None,
+                 chaos=None):
         self.rc = rc
         self.mesh = mesh
         # multi-site wiring: `route` makes the cross-pod path a multi-hop
@@ -69,6 +70,10 @@ class Trainer:
         # the cross-pod psum reduce intra-site before the slow hop
         self.route = route
         self.site_groups = site_groups
+        # self-healing: a repro.core.chaos.ChaosMonitor gets one host-side
+        # hook per executed step (between steps — never mid-step), from
+        # which it watches the route's links and drives re-route/failover
+        self.chaos = chaos
         self.bundle: StepBundle = build_train_step(rc, mesh, route=route,
                                                    site_groups=site_groups)
         self.ckpt_every = ckpt_every
@@ -195,6 +200,11 @@ class Trainer:
                 new_cfg = self.tuner.observe(dt)
                 if new_cfg is not None:
                     self._retune(new_cfg, log)
+            if self.chaos is not None:
+                # between steps (the step above is fully retired), so a
+                # route swap or failover here is mid-step-safe by
+                # construction: the next step launches on the new bundle
+                self.chaos.on_step(self, log=log)
             rec = {"step": self.step,
                    "loss": float(metrics["loss"]),
                    "grad_norm": float(metrics["grad_norm"]),
@@ -262,6 +272,45 @@ class Trainer:
             f"chunk={cfg['chunk_mb']}MiB pacing={cfg['pacing']}"
             + (f" algo={cfg['algo']}" if "algo" in cfg else "")
             + (f" bucket={cfg['bucket_mb']}MiB" if "bucket_mb" in cfg else ""))
+
+    # -- self-healing (driven by repro.core.chaos.ChaosMonitor) --------------
+    def apply_route(self, new_route, log: Callable[[str], None] = print) -> None:
+        """Swap the training path onto a replanned route (a hop died and
+        the topology found a detour).  Runs between steps: the live state
+        tensors carry over untouched — only streams/chunk/algo wiring
+        changes, so state shardings are identical across bundles — and the
+        next step pays one XLA compile on the new route."""
+        self.route = new_route
+        self._bundles.clear()        # keyed by knobs, not route: invalidate
+        self.bundle = build_train_step(self.rc, self.mesh, route=new_route,
+                                       site_groups=self.site_groups)
+        self._fresh_compile = True
+        if self.tuner is not None:
+            # the old route's cost landscape is gone: revert any in-flight
+            # probe and restart the climb from the incumbent on fresh moves
+            self.tuner.abort_probe()
+            self.tuner.converged = False
+            self.tuner.best_cost = None
+        log(f"[chaos] step {self.step}: route replanned -> "
+            + " -> ".join(str(s) for s in getattr(new_route, 'sites', ())))
+
+    def failover_to_replica(self, log: Callable[[str], None] = print) -> str:
+        """Whole-site loss: the remote site is unreachable on *any* route.
+        Drop the cross-site path (train on with the surviving site's pods)
+        and restore from the newest restorable checkpoint — the replica
+        mirror when the primary directory died with the site.  Runs
+        between steps, so the swap is mid-step-safe."""
+        self.route = None
+        self._bundles.clear()
+        self.bundle = build_train_step(self.rc, self.mesh, route=None,
+                                       site_groups=self.site_groups)
+        self._fresh_compile = True
+        outcome = "degraded"
+        if self.manager and self.manager.has_checkpoint():
+            self._recover()
+            outcome = "restored"
+        log(f"[chaos] step {self.step}: site lost; failover ({outcome})")
+        return outcome
 
     def _recover(self):
         # has_checkpoint, not latest_step: mid-run recovery may also restore

@@ -108,6 +108,54 @@ def test_tuner_mechanics():
     assert tuner.observe(1.0) is None  # converged tuner stays quiet
 
 
+def test_abort_probe_reverts_mid_probe_config():
+    """Regression: a path fault during a probe window must revert the
+    probed config.  Before the fix, the fault left the (possibly losing)
+    probed knobs pinned on the path while the tuner's incumbent pointed at
+    the old config — and the fault-corrupted window could even be booked
+    as the probe's cost."""
+    tuner = OnlineTuner(streams=32, chunk_mb=8.0, window=3, warmup=0)
+    incumbent = tuner.config()
+    probe = None
+    for _ in range(3):
+        probe = tuner.observe(1.0) or probe
+    assert probe is not None and probe != incumbent   # probe in flight
+    tuner.observe(50.0)                    # fault corrupts the window...
+    reverted = tuner.abort_probe()         # ...and the path dies mid-probe
+    assert reverted == incumbent, "losing config must not stay pinned"
+    assert tuner.config() == tuner.best_config() == incumbent
+    # the corrupted partial window is discarded, not booked as a cost
+    assert all(cost == 1.0 for _, cost in tuner.history)
+    # the aborted move is re-queued for a clean re-probe after recovery
+    assert tuner._moves and tuner._moves[0] is not None
+    again = None
+    for _ in range(3):
+        again = tuner.observe(1.0) or again
+    assert again == probe, "aborted probe must be re-tried, not lost"
+    # aborting with no probe in flight is a no-op returning None
+    fresh = OnlineTuner(streams=32, chunk_mb=8.0, window=3, warmup=0)
+    assert fresh.abort_probe() is None
+
+
+def test_route_tuner_abort_probe_reverts_every_hop():
+    from repro.core.autotune import RouteTuner
+    from repro.core.path import Hop, LinkSpec
+
+    wan = LinkSpec("wan", 50e-3, 1e8, 64 << 10)
+    path = WidePath(axis="pod", name="r").with_hops((
+        Hop("a->b", ICI, WidePath().comm, 1),
+        Hop("b->c", wan, WidePath().comm, 1)))
+    rt = RouteTuner(path, window=2, warmup=0)
+    for _ in range(2):
+        rt.observe_total(1.0)              # both hops propose probes
+    incumbents = [t.best_config() for t in rt.tuners]
+    reverted = rt.abort_probe()
+    assert set(reverted) == {0, 1}
+    for i, t in enumerate(rt.tuners):
+        assert reverted[i] == incumbents[i]
+        assert t.config() == t.best_config()
+
+
 # ---------------------------------------------------------------------------
 # telemetry
 # ---------------------------------------------------------------------------

@@ -1,0 +1,471 @@
+"""Deterministic chaos suite: fault injection -> detection -> self-healing.
+
+Every scenario is driven by seeded, step-stamped fault schedules
+(`LinkProfile.drop / degrade / partition`), so timelines replay
+bit-identically: tests assert *golden* incident sequences, not
+distributions.  Covers the three data planes the paper's deployments
+exercised: training collectives (re-route + re-tune, and whole-site
+failover to the checkpoint replica), wide-area file transfer (mpw-cp
+chunk requeue on a detour), and the relay/degrade path (throughput
+collapse in a window, recovery after).
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+import os
+import tempfile
+
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.core import (
+    ChaosDetector,
+    cosmogrid_topology,
+    get_incident_log,
+    get_telemetry,
+    healing_transfer,
+)
+from repro.core.autotune import simulate_hop_s
+from repro.core.filetransfer import ChecksumError
+from repro.core.topology import Fault, LinkProfile, Topology
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    get_incident_log().clear()
+    get_telemetry().reset()
+    yield
+    get_incident_log().clear()
+
+
+def _wan(name="wan", faults=()):
+    return LinkProfile(name, 50e-3, 1e8, window=64 << 10, streams=16,
+                       chunk_mb=1.0, faults=tuple(faults))
+
+
+# ---------------------------------------------------------------------------
+# fault schedules & link health
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_health_folding():
+    prof = _wan().drop(5, until=9).degrade(0.25, (2, 4), error_rate=0.1)
+    # healthy before anything starts
+    h0 = prof.health(0)
+    assert h0.alive and h0.bandwidth_factor == 1.0 and not h0.faulty
+    # degrade window only
+    h3 = prof.health(3)
+    assert h3.alive and h3.bandwidth_factor == 0.25
+    assert h3.error_rate == pytest.approx(0.1) and h3.faulty
+    # drop window: dead regardless of the degrade
+    assert not prof.health(5).alive
+    assert not prof.health(8).alive
+    # drop `until` is exclusive; everything healed at 9
+    assert prof.health(9).alive and not prof.health(9).faulty
+
+
+def test_fault_active_and_partition_sites():
+    f = Fault("drop", start=4)
+    assert not f.active(3) and f.active(4) and f.active(10**6)
+    prof = _wan().partition("tokyo", at_step=2)
+    assert prof.health(1).partitioned == ()
+    assert prof.health(2).partitioned == ("tokyo",)
+    assert not prof.health(2).alive
+
+
+def test_degrade_validates_factor():
+    with pytest.raises(ValueError):
+        _wan().degrade(0.0, (0, 5))
+    with pytest.raises(ValueError):
+        _wan().degrade(1.5, (0, 5))
+
+
+def test_transfer_s_applies_schedule_only_with_step():
+    prof = _wan(faults=[Fault("drop", start=0)])
+    nb = 64 << 20
+    # step=None is the schedule-blind planner view (route costing)
+    assert math.isfinite(prof.transfer_s(nb))
+    assert prof.transfer_s(nb, step=0) == math.inf
+    slow = _wan(faults=[Fault("degrade", start=0, factor=0.1)])
+    assert slow.transfer_s(nb, step=0) > 5 * slow.transfer_s(nb)
+
+
+def test_health_seed_is_deterministic_per_schedule():
+    a = _wan().degrade(0.5, (0, 4), seed=7).health(1)
+    b = _wan().degrade(0.5, (0, 4), seed=7).health(1)
+    c = _wan().degrade(0.5, (0, 4), seed=8).health(1)
+    assert a.seed == b.seed
+    assert a.seed != c.seed
+
+
+# ---------------------------------------------------------------------------
+# topology: down links, detours, site loss
+# ---------------------------------------------------------------------------
+
+def test_topology_reroutes_around_failed_link():
+    t = cosmogrid_topology(backup_links=True)
+    assert t.route("amsterdam", "tokyo").sites == ("amsterdam", "tokyo")
+    t.fail_link("amsterdam", "tokyo")
+    assert t.is_down("amsterdam", "tokyo")
+    assert t.is_down("tokyo", "amsterdam")          # bidirectional default
+    detour = t.route("amsterdam", "tokyo")
+    assert detour.sites == ("amsterdam", "edinburgh", "tokyo")
+    assert detour.profiles[-1].name == "tokyo-edinburgh-backup"
+    t.restore_link("amsterdam", "tokyo")
+    assert not t.down_links()
+    assert t.route("amsterdam", "tokyo").sites == ("amsterdam", "tokyo")
+
+
+def test_topology_site_loss_disconnects():
+    t = cosmogrid_topology(backup_links=True)
+    hit = t.fail_site("tokyo")
+    assert all("tokyo" in pair for pair in hit)
+    with pytest.raises(KeyError):
+        t.route("amsterdam", "tokyo")
+    # the rest of the grid still routes
+    assert t.route("amsterdam", "espoo").n_hops == 1
+
+
+def test_plain_cosmogrid_has_no_backup():
+    t = cosmogrid_topology()
+    assert t.link("tokyo", "edinburgh") is None
+    t.fail_link("amsterdam", "tokyo")
+    with pytest.raises(KeyError):
+        t.route("amsterdam", "tokyo")
+    with pytest.raises(KeyError):
+        t.fail_link("amsterdam", "nowhere")
+
+
+# ---------------------------------------------------------------------------
+# detector
+# ---------------------------------------------------------------------------
+
+def test_detector_fires_on_collapse_after_window():
+    det = ChaosDetector(collapse=8.0, window=2, min_baseline=2)
+    assert not det.observe("k", 1.0)
+    assert not det.observe("k", 1.1)
+    assert det.baseline("k") == pytest.approx(1.05)
+    assert not det.observe("k", 50.0)     # 1st anomaly: inside the window
+    assert det.observe("k", 50.0)         # 2nd consecutive: fires
+    # latched: no re-fire until reset
+    assert not det.observe("k", 50.0)
+    det.reset("k")
+    assert det.baseline("k") is None
+
+
+def test_detector_timeout_fires_before_baseline_exists():
+    det = ChaosDetector(window=2, min_baseline=2, abs_timeout_s=30.0)
+    assert not det.observe("dead", 30.0)  # no baseline yet: timeout still bad
+    assert det.observe("dead", 30.0)
+
+
+def test_detector_ignores_mild_degrade():
+    det = ChaosDetector(collapse=8.0, window=1, min_baseline=2)
+    for s in (1.0, 1.0):
+        det.observe("k", s)
+    # 3x slower is the tuner's problem, not a re-route trigger
+    assert not det.observe("k", 3.0)
+    assert not det.observe("k", 3.0)
+
+
+def test_detector_anomaly_streak_must_be_consecutive():
+    det = ChaosDetector(collapse=8.0, window=3, min_baseline=2)
+    for s in (1.0, 1.0):
+        det.observe("k", s)
+    assert not det.observe("k", 20.0)
+    assert not det.observe("k", 20.0)
+    assert not det.observe("k", 1.0)      # healthy sample resets the streak
+    assert not det.observe("k", 20.0)
+    assert not det.observe("k", 20.0)
+    assert det.observe("k", 20.0)
+
+
+# ---------------------------------------------------------------------------
+# incident log
+# ---------------------------------------------------------------------------
+
+def test_incident_log_golden_timeline():
+    log = get_incident_log()
+    log.add(4, "inject", "a->b", {"kind": "drop", "link": "wan"})
+    log.add(5, "detect", "a->b", {"signal": "timeout"})
+    log.add(5, "replan", "a->c", {"route": "a --[x]--> c"})
+    log.add(7, "recover", "a->b", {"latency_steps": 3})
+    assert [(e.kind, e.step) for e in log.events()] == [
+        ("inject", 4), ("detect", 5), ("replan", 5), ("recover", 7)]
+    assert log.recovery_latencies() == [("a->b", 3)]
+    rows = log.timeline()
+    assert rows[0] == {"step": 4, "event": "inject", "subject": "a->b",
+                       "detail": {"kind": "drop", "link": "wan"}}
+    md = log.format_timeline()
+    assert md.splitlines()[0] == "| step | event | subject | detail |"
+    assert "| 4 | inject | a->b | kind=drop link=wan |" in md
+    with pytest.raises(ValueError):
+        log.add(0, "explode", "a->b")
+    log.clear()
+    assert log.format_timeline() == "(no incidents)"
+
+
+# ---------------------------------------------------------------------------
+# relay/degrade: modeled hop seconds collapse inside the window and recover
+# ---------------------------------------------------------------------------
+
+def test_simulate_hop_s_degrade_window_and_recovery():
+    # low-alpha link: throughput is bandwidth-limited (not window/RTT-capped),
+    # so the degrade factor shows up ~proportionally in modeled seconds
+    prof = LinkProfile("metro", 1e-3, 1e8, window=64 << 10, streams=16,
+                       chunk_mb=1.0).degrade(0.05, (3, 6))
+    nb = 64 << 20
+    healthy = simulate_hop_s(nb, prof, 0)
+    collapsed = simulate_hop_s(nb, prof, 4)
+    healed = simulate_hop_s(nb, prof, 7)
+    assert collapsed > 5 * healthy            # achieved-GB/s collapse
+    assert healed == pytest.approx(healthy, rel=0.3)
+    # a detector watching this hop fires only during the window
+    det = ChaosDetector(collapse=4.0, window=2, min_baseline=2,
+                        abs_timeout_s=30.0)
+    fired_at = None
+    for step in range(10):
+        if det.observe("hop", simulate_hop_s(nb, prof, step)) \
+                and fired_at is None:
+            fired_at = step
+    assert fired_at == 4                      # window start 3 + window of 2
+
+
+def test_simulate_hop_s_dead_link_is_the_watchdog_timeout():
+    prof = _wan().drop(2)
+    assert simulate_hop_s(1 << 20, prof, 1, timeout_s=30.0) < 30.0
+    assert simulate_hop_s(1 << 20, prof, 2, timeout_s=30.0) == 30.0
+
+
+# ---------------------------------------------------------------------------
+# file transfer: heal around a dead hop, byte accounting, determinism
+# ---------------------------------------------------------------------------
+
+def _run_healing_copy(tmpdir, seed=123):
+    """One healed 1 MiB copy over a dead lightpath; returns (result, kinds)."""
+    log = get_incident_log()
+    log.clear()
+    t = cosmogrid_topology(backup_links=True)
+    t.connect("amsterdam", "tokyo", t.link("amsterdam", "tokyo").drop(0))
+    eng = healing_transfer(t, "amsterdam", "tokyo",
+                           comm=CommConfig(streams=4, chunk_mb=0.0625),
+                           max_retries=1)
+    src = os.path.join(tmpdir, "src.bin")
+    dst = os.path.join(tmpdir, "dst.bin")
+    data = bytes((seed + i * 31) % 256 for i in range(1 << 20))
+    with open(src, "wb") as f:
+        f.write(data)
+    res = eng.copy(src, dst)
+    with open(dst, "rb") as f:
+        assert f.read() == data
+    assert res.sha256 == hashlib.sha256(data).hexdigest()
+    return res, [(e.kind, e.subject) for e in log.events()]
+
+
+def test_file_transfer_heals_around_dead_link(tmp_path):
+    res, kinds = _run_healing_copy(str(tmp_path))
+    assert res.reroutes == 1
+    assert res.nbytes == 1 << 20
+    # bytes burned on the dead hop still count: wire >= payload
+    assert res.wire_bytes >= res.nbytes
+    assert res.reroute_history[0]["failed_hop"] == 0
+    for kind in ("inject", "detect", "replan", "requeue"):
+        assert (kind, "amsterdam->tokyo") in kinds, (kind, kinds)
+    # detect cites checksum exhaustion, replan cites the detour
+    log = get_incident_log()
+    assert log.events("detect")[0].detail["signal"] == "checksum"
+    assert "edinburgh" in log.events("replan")[0].detail["route"]
+
+
+def test_file_transfer_healing_is_deterministic(tmp_path):
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    a.mkdir()
+    b.mkdir()
+    res1, kinds1 = _run_healing_copy(str(a))
+    res2, kinds2 = _run_healing_copy(str(b))
+    assert kinds1 == kinds2
+    assert (res1.reroutes, res1.retries, res1.wire_bytes, res1.sha256) == \
+           (res2.reroutes, res2.retries, res2.wire_bytes, res2.sha256)
+
+
+def test_file_transfer_no_detour_propagates_checksum_error(tmp_path):
+    t = cosmogrid_topology()                 # star: no backup to tokyo
+    t.connect("amsterdam", "tokyo", t.link("amsterdam", "tokyo").drop(0))
+    eng = healing_transfer(t, "amsterdam", "tokyo",
+                           comm=CommConfig(streams=2, chunk_mb=0.0625),
+                           max_retries=1)
+    src = os.path.join(str(tmp_path), "src.bin")
+    with open(src, "wb") as f:
+        f.write(b"x" * (1 << 18))
+    with pytest.raises(ChecksumError):
+        eng.copy(src, os.path.join(str(tmp_path), "dst.bin"))
+    kinds = [e.kind for e in get_incident_log().events()]
+    assert "detect" in kinds and "replan" not in kinds
+
+
+# ---------------------------------------------------------------------------
+# training: mid-run link drop -> re-route + re-tune, loss parity (tentpole
+# acceptance scenario), and whole-site loss -> replica failover
+# ---------------------------------------------------------------------------
+
+_TRAIN_REROUTE = r"""
+import json
+import jax
+from repro.configs import get_config, smoke_config, RunConfig, ShapeConfig, CommConfig, TrainConfig
+from repro.runtime import Trainer
+from repro.core import (cosmogrid_topology, ChaosMonitor, ChaosDetector,
+                        get_incident_log, MPW)
+from repro.data import DataConfig, make_pipeline
+
+STEPS, FAULT_AT = 10, 4
+
+def build():
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    rc = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+                   comm=CommConfig(mode="hierarchical", streams=4,
+                                   chunk_mb=0.01, autotune=False),
+                   train=TrainConfig(zero1=True, warmup_steps=2,
+                                     total_steps=50))
+    data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8), prefetch=0)
+    return rc, data
+
+mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+# control run: fault-free, stays on the lightpath
+t0 = cosmogrid_topology(backup_links=True)
+rc, data = build()
+with jax.set_mesh(mesh):
+    ctr = Trainer(rc, mesh, route=t0.route("amsterdam", "tokyo"),
+                  site_groups=t0.pod_groups())
+    ctr.init_or_restore()
+    ref = ctr.run(data, STEPS, log_every=0)
+
+# chaos run: the lightpath dies at FAULT_AT
+log = get_incident_log(); log.clear()
+t1 = cosmogrid_topology(backup_links=True)
+t1.connect("amsterdam", "tokyo", t1.link("amsterdam", "tokyo").drop(FAULT_AT))
+mon = ChaosMonitor(t1, "amsterdam", "tokyo",
+                   detector=ChaosDetector(window=2, min_baseline=2),
+                   recover_after=2)
+rc2, data2 = build()
+with jax.set_mesh(mesh):
+    tr = Trainer(rc2, mesh, route=t1.route("amsterdam", "tokyo"),
+                 site_groups=t1.pod_groups(), chaos=mon)
+    tr.init_or_restore()
+    hist = tr.run(data2, STEPS, log_every=0)
+
+out = {}
+out["timeline"] = [[e.kind, e.subject, e.step] for e in log.events()]
+out["final_route"] = list(tr.route.sites) if tr.route else None
+ref_l = [h["loss"] for h in ref]; got_l = [h["loss"] for h in hist]
+out["n_steps"] = [len(ref_l), len(got_l)]
+out["loss_diff"] = max(abs(a - b) for a, b in zip(ref_l, got_l))
+rep = MPW.Init().Report(formatted=True)
+out["report_incidents"] = ("**Incidents**" in rep) and ("| inject |" in rep)
+out["incidents_rows"] = len(MPW.Init().Incidents())
+out["recovery"] = log.recovery_latencies()
+out["window"] = mon.detector.window
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def test_chaos_training_reroute_and_loss_parity(multidev):
+    """Acceptance scenario: mid-run drop of the amsterdam-tokyo lightpath on
+    the 4-site CosmoGrid testbed causes detect -> replan (via edinburgh) ->
+    re-tune within the detection window, with loss parity vs the fault-free
+    run and a golden incident timeline ending in a nonzero-latency recover."""
+    res = multidev(_TRAIN_REROUTE)
+    # golden timeline: inject at the fault step, detect one window later,
+    # replan+retune the same step, recover after the post-heal window
+    assert [(k, s) for k, _, s in res["timeline"]] == [
+        ("inject", 4), ("detect", 5), ("replan", 5), ("retune", 5),
+        ("recover", 7)], res["timeline"]
+    assert all(sub == "amsterdam->tokyo" for _, sub, _ in res["timeline"])
+    inject_step = res["timeline"][0][2]
+    detect_step = res["timeline"][1][2]
+    assert detect_step - inject_step <= res["window"]
+    assert res["final_route"] == ["amsterdam", "edinburgh", "tokyo"]
+    # the detour only changes chunk scheduling, never collective math
+    assert res["n_steps"] == [10, 10]
+    assert res["loss_diff"] <= 1e-6
+    assert res["report_incidents"]
+    assert res["incidents_rows"] == 5
+    [(subject, latency)] = res["recovery"]
+    assert subject == "amsterdam->tokyo" and latency > 0
+
+
+_TRAIN_FAILOVER = r"""
+import json, os, shutil, tempfile
+import jax
+from repro.configs import get_config, smoke_config, RunConfig, ShapeConfig, CommConfig, TrainConfig
+from repro.runtime import Trainer
+from repro.core import (cosmogrid_topology, ChaosMonitor, ChaosDetector,
+                        get_incident_log)
+from repro.data import DataConfig, make_pipeline
+
+cfg = smoke_config(get_config("qwen1.5-0.5b"))
+rc = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+               comm=CommConfig(mode="hierarchical", streams=4, chunk_mb=0.01,
+                               autotune=False),
+               train=TrainConfig(zero1=True, warmup_steps=2, total_steps=50))
+data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=8), prefetch=0)
+mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+log = get_incident_log(); log.clear()
+t = cosmogrid_topology()          # no backup: tokyo loss is unroutable
+t.connect("amsterdam", "tokyo",
+          t.link("amsterdam", "tokyo").partition("tokyo", at_step=7))
+mon = ChaosMonitor(t, "amsterdam", "tokyo",
+                   detector=ChaosDetector(window=2, min_baseline=2),
+                   recover_after=2)
+tmp = tempfile.mkdtemp()
+primary, replica = os.path.join(tmp, "ck"), os.path.join(tmp, "rep")
+with jax.set_mesh(mesh):
+    tr = Trainer(rc, mesh, route=t.route("amsterdam", "tokyo"),
+                 site_groups=t.pod_groups(), ckpt_dir=primary,
+                 replica_dir=replica, ckpt_every=5, chaos=mon)
+    tr.init_or_restore()
+    tr.run(data, 6, log_every=0)       # healthy segment; ckpt 5 + replica
+    # the site's storage dies with the site: only the replica mirror is left
+    shutil.rmtree(primary)
+    hist = tr.run(data, 6, log_every=0)
+tr.close()
+out = {}
+out["timeline"] = [[e.kind, e.subject, e.step] for e in log.events()]
+out["route_after"] = tr.route.sites if tr.route else None
+out["steps"] = [h["step"] for h in hist]
+fo = log.events("failover")[0]
+out["failover"] = dict(fo.detail)
+out["recovery"] = log.recovery_latencies()
+out["losses_finite"] = all(h["loss"] == h["loss"] for h in hist)
+shutil.rmtree(tmp)
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def test_chaos_training_failover_to_replica(multidev):
+    """Whole-site loss on a star topology has no detour: the trainer falls
+    back to the replica checkpoint mirror, mid-step-safe (the rollback is
+    visible as repeated step numbers in the history)."""
+    res = multidev(_TRAIN_FAILOVER)
+    kinds = [k for k, _, _ in res["timeline"]]
+    assert kinds == ["inject", "detect", "failover", "recover"], res
+    steps = {k: s for k, _, s in res["timeline"]}
+    assert steps["inject"] == 7
+    assert steps["detect"] - steps["inject"] <= 2
+    assert res["route_after"] is None
+    # restored from the replica: resumed at the last replicated step (run()
+    # ends each segment with a blocking save + replicate_now, so that's the
+    # first segment's final step, not the last ckpt_every multiple)
+    assert res["failover"]["outcome"] == "restored"
+    assert res["failover"]["resume_step"] == 6
+    # rollback visible: the second segment revisits pre-fault step numbers
+    assert min(res["steps"]) <= 6
+    [(_, latency)] = res["recovery"]
+    assert latency > 0
+    assert res["losses_finite"]

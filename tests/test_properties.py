@@ -1,0 +1,136 @@
+"""Property-based invariants for the chunk planners and int8 quantization.
+
+Runs under hypothesis when installed; otherwise the deterministic fallback
+engine in conftest.py drives boundary + seeded-random examples.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("props", max_examples=25, deadline=None)
+    settings.load_profile("props")
+except ImportError:  # deterministic fallback engine (see conftest.py)
+    from conftest import given, st  # noqa: F401
+
+from repro.core.filetransfer import plan_file_chunks
+from repro.core.streams import assign_streams, leaf_bytes, plan_chunks
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# plan_chunks
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 97), d=st.sampled_from([1, 3, 32, 129]),
+       chunk_kb=st.sampled_from([1, 4, 64]),
+       dtype=st.sampled_from([np.float32, np.int8]))
+def test_plan_chunks_exact_byte_accounting(n, d, chunk_kb, dtype):
+    x = np.zeros((n, d), dtype)
+    chunks = plan_chunks([x], [0], chunk_kb << 10)
+    # chunk bytes sum exactly to the leaf's bytes (telemetry GB/s depends
+    # on this), and row coverage is contiguous and gapless
+    assert sum(c.nbytes for c in chunks) == leaf_bytes(x)
+    pos = 0
+    for c in chunks:
+        assert c.leaf == 0 and c.dim == 0
+        assert c.start == pos and c.size >= 1
+        pos += c.size
+    assert pos == n
+
+
+@given(n=st.integers(2, 80), rows=st.integers(1, 16))
+def test_plan_chunks_pinned_rows_geometry(n, rows):
+    x = np.zeros((n, 7), np.float32)
+    chunks = plan_chunks([x], [0], 1 << 30, rows=[rows])
+    # pinned rows override the byte budget: every chunk but the last has
+    # exactly `rows` rows, and the remainder lands in the last chunk
+    assert all(c.size == rows for c in chunks[:-1])
+    assert chunks[-1].size == n - rows * (len(chunks) - 1)
+    assert sum(c.nbytes for c in chunks) == leaf_bytes(x)
+
+
+@given(d=st.sampled_from([1, 5, 64]), chunk_kb=st.sampled_from([1, 16]))
+def test_plan_chunks_multi_leaf_mixed_dims(d, chunk_kb):
+    leaves = [np.zeros((40, d), np.float32),
+              np.zeros((3,), np.float32),
+              np.zeros((8, d), np.float32)]
+    chunks = plan_chunks(leaves, [0, None, 0], chunk_kb << 10)
+    for i, x in enumerate(leaves):
+        mine = [c for c in chunks if c.leaf == i]
+        assert mine, f"leaf {i} got no chunks"
+        assert sum(c.nbytes for c in mine) == leaf_bytes(x)
+    # a dim=None leaf is never split
+    assert len([c for c in chunks if c.leaf == 1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# plan_file_chunks
+# ---------------------------------------------------------------------------
+
+@given(nbytes=st.integers(1, 1 << 21), chunk=st.sampled_from(
+    [1, 1 << 16, (1 << 16) + 1, 1 << 20]))
+def test_plan_file_chunks_covers_every_byte(nbytes, chunk):
+    chunks = plan_file_chunks(nbytes, chunk)
+    floor = max(1 << 16, chunk)  # planner clamps tiny chunk sizes
+    off = 0
+    for i, c in enumerate(chunks):
+        assert c.leaf == i and c.start == off
+        assert 1 <= c.size <= floor and c.size == c.nbytes
+        off += c.size
+    assert off == nbytes
+
+
+def test_plan_file_chunks_empty_file_single_marker():
+    chunks = plan_file_chunks(0, 1 << 20)
+    assert len(chunks) == 1 and chunks[0].size == 0
+
+
+# ---------------------------------------------------------------------------
+# assign_streams
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 64), streams=st.integers(1, 12),
+       chunk_kb=st.sampled_from([1, 8]))
+def test_assign_streams_partitions_all_chunks(n, streams, chunk_kb):
+    x = np.zeros((n, 64), np.float32)
+    chunks = plan_chunks([x], [0], chunk_kb << 10)
+    buckets = assign_streams(chunks, streams)
+    assert 1 <= len(buckets) <= streams
+    assert all(buckets), "no empty buckets"
+    got = sorted((c.leaf, c.start) for b in buckets for c in b)
+    want = sorted((c.leaf, c.start) for c in chunks)
+    assert got == want  # every chunk assigned exactly once
+    # LPT bound: no stream exceeds the ideal share by more than one chunk
+    loads = [sum(c.nbytes for c in b) for b in buckets]
+    total = sum(c.nbytes for c in chunks)
+    biggest = max(c.nbytes for c in chunks)
+    assert max(loads) <= total / len(buckets) + biggest
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+@given(R=st.integers(1, 24), nb=st.integers(1, 3),
+       scale=st.floats(1e-3, 1e3))
+def test_quant_int8_roundtrip_bound_ref(R, nb, scale):
+    n = nb * 256
+    rng = np.random.default_rng(R * 1000 + nb)
+    x = jnp.asarray(rng.standard_normal((R, n)).astype(np.float32) * scale)
+    q, s = ops.quant_int8(x, impl="ref")
+    y = ops.dequant_int8(q, s, impl="ref")
+    # symmetric int8: roundoff within half a quantization step per block
+    step = np.asarray(s, np.float32).reshape(R, nb, 1)
+    err = np.abs(np.asarray(y) - np.asarray(x)).reshape(R, nb, 256)
+    assert (err <= step * 0.5 + 1e-7).all()
+
+
+@given(extra=st.integers(1, 255))
+def test_quant_int8_rejects_ragged_trailing_dim(extra):
+    x = jnp.zeros((2, 256 + extra), jnp.float32)
+    with pytest.raises(ValueError, match="trailing dim"):
+        ops.quant_int8(x, block=256)
