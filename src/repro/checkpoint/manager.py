@@ -36,12 +36,16 @@ class CheckpointManager:
         # first save in flight) must not begin mirroring — the mirror prune
         # would wipe the very replica the restart may restore from
         self.gatherer = None
+        # guards gatherer/_async_thread: _ensure_gatherer runs on the async
+        # save thread while save()/wait()/close() run on the trainer thread
+        self._state_lock = threading.Lock()
         self._async_thread: Optional[threading.Thread] = None
 
     def _ensure_gatherer(self):
-        if self.replica_dir and self.gatherer is None:
-            self.gatherer = DataGather(self.dir, self.replica_dir,
-                                       transfer=self.transfer).start()
+        with self._state_lock:
+            if self.replica_dir and self.gatherer is None:
+                self.gatherer = DataGather(self.dir, self.replica_dir,
+                                           transfer=self.transfer).start()
 
     # -- discovery -----------------------------------------------------------
     @staticmethod
@@ -96,13 +100,17 @@ class CheckpointManager:
         if block:
             run()
         else:
-            self._async_thread = threading.Thread(target=run, daemon=True)
-            self._async_thread.start()
+            with self._state_lock:
+                self._async_thread = threading.Thread(target=run, daemon=True)
+                self._async_thread.start()
 
     def wait(self):
-        if self._async_thread is not None:
-            self._async_thread.join()
-            self._async_thread = None
+        # join OUTSIDE the lock: run() takes it in _ensure_gatherer
+        t = self._async_thread
+        if t is not None:
+            t.join()
+            with self._state_lock:
+                self._async_thread = None
 
     def replicate_now(self) -> int:
         """One synchronous mirror pass to the replica: ship the checkpoints

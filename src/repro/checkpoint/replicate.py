@@ -151,8 +151,9 @@ class DataGather:
                 self._safe_sync()
                 self._stop.wait(self.interval_s)
 
-        self._thread = threading.Thread(target=loop, daemon=True)
-        self._thread.start()
+        with self._sync_lock:
+            self._thread = threading.Thread(target=loop, daemon=True)
+            self._thread.start()
         return self
 
     def stop(self):

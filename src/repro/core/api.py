@@ -83,7 +83,10 @@ class MPW:
         comm = comm or CommConfig()
         links = list(links) if links is not None else [INTERPOD] * len(streams_per_hop)
         if len(links) != len(streams_per_hop):
-            raise ValueError("streams_per_hop and links must align per hop")
+            raise ValueError(
+                f"CreatePathVariadic: streams_per_hop has "
+                f"{len(streams_per_hop)} entr{'y' if len(streams_per_hop) == 1 else 'ies'} "
+                f"but links has {len(links)} — they must align per hop")
         pid = next(_PATH_IDS)
         hops = tuple(
             Hop(name=f"hop{i}-{lk.name}", link=lk,

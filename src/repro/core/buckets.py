@@ -140,7 +140,10 @@ def plan_buckets(leaves: list, flags: list[bool], bucket_bytes: int
         buckets.append(Bucket(len(buckets), lo, hi, nb))
         planned += nb
         hi = lo
-    assert planned == stacked_bytes, (planned, stacked_bytes)
+    if planned != stacked_bytes:
+        raise RuntimeError(
+            f"bucket plan covers {planned} bytes but the stacked leaves "
+            f"hold {stacked_bytes} (n_layers={nL}, layers_per_bucket={lpb})")
     if rest_bytes:
         buckets.append(Bucket(len(buckets), -1, -1, rest_bytes))
     return BucketPlan(nL, lpb, tuple(buckets), stacked_bytes, rest_bytes)

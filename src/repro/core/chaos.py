@@ -239,6 +239,9 @@ class ChaosMonitor:
         self.seed = int(seed)
         self._injected: set[tuple] = set()
         self._inject_ticks: dict[str, tuple] = {}   # subject -> (step, tick)
+        # guards _pending/_tick: the mirror/file-transfer threads call back
+        # into the monitor while the trainer thread drives on_step
+        self._state_lock = threading.Lock()
         self._pending: Optional[dict] = None   # incident awaiting recovery
         # monotonic count of on_step calls: latency is measured on this, not
         # on trainer.step, which rolls BACK when a failover restores an
@@ -248,7 +251,8 @@ class ChaosMonitor:
 
     # -- the per-step hook ---------------------------------------------------
     def on_step(self, trainer, log: Callable[[str], None] = print) -> None:
-        self._tick += 1
+        with self._state_lock:
+            self._tick += 1
         step = trainer.step
         self._heal_progress(trainer, step)
         route = trainer.route
@@ -333,9 +337,10 @@ class ChaosMonitor:
             self.log.add(step, "failover", self.dst,
                          {"outcome": outcome, "resume_step": trainer.step})
             mode = "failover"
-        self._pending = {"subject": subject, "inject_step": inject_step,
-                         "inject_tick": inject_tick, "detect_step": step,
-                         "streak": 0, "mode": mode}
+        with self._state_lock:
+            self._pending = {"subject": subject, "inject_step": inject_step,
+                             "inject_tick": inject_tick, "detect_step": step,
+                             "streak": 0, "mode": mode}
 
     def _heal_progress(self, trainer, step: int) -> None:
         p = self._pending
@@ -356,7 +361,8 @@ class ChaosMonitor:
                           "detect_step": p["detect_step"],
                           "latency_steps": self._tick - p["inject_tick"],
                           "mode": p["mode"]})
-            self._pending = None
+            with self._state_lock:
+                self._pending = None
 
 
 # ---------------------------------------------------------------------------

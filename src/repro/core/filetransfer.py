@@ -171,6 +171,9 @@ class FileTransfer:
         self.max_reroutes = max(0, int(max_reroutes))
         self.max_retries = max(0, int(max_retries))
         self.record = record
+        # guards post-job path retunes: the DataGather mirror thread and a
+        # caller-driven replicate_now() can drive the same engine
+        self._path_lock = threading.Lock()
         # digest=False skips the whole-file sha256 re-read at finalize
         # (FileResult.sha256 stays ""): per-chunk CRCs already verify
         # integrity, so callers that discard the result — the DataGather
@@ -414,7 +417,8 @@ class FileTransfer:
         if self.tuner is not None:
             cfg = self.tuner.observe(res.modeled_s)
             if cfg is not None:
-                self.path = self.path.with_(**cfg)
+                with self._path_lock:
+                    self.path = self.path.with_(**cfg)
                 if self.record:
                     tel.get_telemetry().path(self.path.key).note_retune(
                         None, cfg)

@@ -79,7 +79,10 @@ def plan_chunks(leaves: list, dims: list[Optional[int]], chunk_bytes: int,
             chunks.append(Chunk(i, dim, start, size, cb))
             planned += cb
             start += size
-        assert planned == nb, (planned, nb)
+        if planned != nb:
+            raise RuntimeError(
+                f"chunk plan covers {planned} bytes but leaf {i} (shape "
+                f"{tuple(x.shape)}, dim {dim}, rows {rows_i}) holds {nb}")
     return chunks
 
 

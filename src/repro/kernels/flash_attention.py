@@ -84,7 +84,9 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     BH, Sq, D = q.shape
     BKH, Sk, _ = k.shape
-    assert BH == BKH * group, (BH, BKH, group)
+    if BH != BKH * group:
+        raise ValueError(f"flash attention: q heads {BH} != kv heads {BKH} "
+                         f"* group {group}")
     if scale is None:
         scale = D ** -0.5
     bq = min(block_q, Sq)

@@ -189,7 +189,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """Batched multi-head attention. q: (B,Sq,H,D); k,v: (B,Sk,KH,D)."""
     B, Sq, H, D = q.shape
     _, Sk, KH, _ = k.shape
-    assert H % KH == 0
+    if H % KH:
+        raise ValueError(f"attention: q heads {H} must be a multiple of "
+                         f"kv heads {KH} (GQA group size)")
     g = H // KH
     if scale is None:
         scale = D ** -0.5

@@ -32,7 +32,9 @@ def quant_int8_2d(x: jax.Array, *, block: int = 256, rows: int = 256,
                   interpret: bool = False):
     """x: (R, n) with n % block == 0 -> (int8 (R,n), f32 scales (R, n/block))."""
     R, n = x.shape
-    assert n % block == 0
+    if n % block:
+        raise ValueError(f"quant_int8_2d: last dim {n} must be a multiple "
+                         f"of block {block}")
     nb = n // block
     br = min(rows, R)
     pr = (-R) % br

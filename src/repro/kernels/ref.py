@@ -58,7 +58,9 @@ def quant_int8_ref(x: jax.Array, block: int = 256):
     Returns (q: int8 same shape, scales: float32 shape[..., n/block]).
     """
     *lead, n = x.shape
-    assert n % block == 0, (n, block)
+    if n % block:
+        raise ValueError(f"quant_int8_ref: last dim {n} must be a multiple "
+                         f"of block {block}")
     xb = x.astype(jnp.float32).reshape(*lead, n // block, block)
     amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)

@@ -31,7 +31,9 @@ class PD:
     dtype: str = "bfloat16"
 
     def __post_init__(self):
-        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"PD: shape {self.shape} and axes {self.axes} "
+                             f"must have the same rank")
 
 
 def _fan_in(pd: PD) -> int:

@@ -166,7 +166,9 @@ class Trainer:
     # -- the loop -------------------------------------------------------------
     def run(self, data_iter, num_steps: int, *, log_every: int = 10,
             log: Callable[[str], None] = print) -> list[dict]:
-        assert self.state is not None, "call init_or_restore() first"
+        if self.state is None:
+            raise RuntimeError("Trainer.state is unset — call "
+                               "init_or_restore() before run()")
         target = self.step + num_steps
         while self.step < target:
             batch = self._place_batch(next(data_iter))

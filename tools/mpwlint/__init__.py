@@ -1,0 +1,16 @@
+"""mpwlint: repo-specific static analysis for the MPWide reproduction.
+
+Two layers (see docs/lint.md):
+
+  * Layer 1 — AST lint rules R1..R5 over ``src/`` (traced-purity,
+    lock-discipline, typed errors, telemetry-key grammar, core determinism).
+  * Layer 2 — semantic plan verifier S1..S4: imports the real planners and
+    checks their contracts over adversarial config sweeps.
+
+Run as ``python -m tools.mpwlint src/``.
+"""
+from tools.mpwlint.findings import Finding, load_baseline
+from tools.mpwlint.engine import lint_paths
+from tools.mpwlint.semantic import run_semantic
+
+__all__ = ["Finding", "load_baseline", "lint_paths", "run_semantic"]

@@ -1,0 +1,5 @@
+import sys
+
+from tools.mpwlint.cli import main
+
+sys.exit(main())

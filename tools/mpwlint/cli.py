@@ -1,0 +1,102 @@
+"""Command line entry: `python -m tools.mpwlint src/ [options]`.
+
+Exit code 0 when every finding is baselined (or there are none); 1 when a
+non-baselined finding exists; 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.mpwlint.engine import changed_files, lint_paths
+from tools.mpwlint.findings import load_baseline, write_baseline
+from tools.mpwlint.semantic import run_semantic
+
+DEFAULT_BASELINE = "tools/mpwlint/baseline.json"
+
+
+def repo_root_of(start: Path) -> Path:
+    for p in (start, *start.parents):
+        if (p / ".git").exists() or (p / "ROADMAP.md").exists():
+            return p
+    return start
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.mpwlint",
+        description="MPWide-repro static analysis: AST rules R1-R5 plus "
+                    "the semantic plan verifier S1-S4 (docs/lint.md).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed waiver file (repo-relative)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="lint only files changed vs HEAD (+ untracked); "
+                    "the semantic verifier runs only when core/ changed")
+    ap.add_argument("--no-semantic", action="store_true",
+                    help="skip the Layer-2 plan verifier (AST rules only)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset, e.g. R1,R3")
+    ap.add_argument("--output", default=None,
+                    help="also write the JSON report to this file")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    repo_root = repo_root_of(Path.cwd())
+    rules = ({r.strip() for r in args.rules.split(",") if r.strip()}
+             if args.rules else None)
+
+    only = None
+    run_sem = not args.no_semantic
+    if args.changed_only:
+        only = changed_files(repo_root)
+        if only is None:
+            print("mpwlint: --changed-only needs git; linting everything",
+                  file=sys.stderr)
+        else:
+            run_sem = run_sem and any("src/repro/core/" in p for p in only)
+
+    findings = lint_paths(args.paths, repo_root, rules=rules, only=only)
+    if run_sem and (rules is None or any(r.startswith("S") for r in rules)):
+        sem = run_semantic(repo_root)
+        if rules is not None:
+            sem = [f for f in sem if f.rule in rules]
+        findings.extend(sem)
+
+    baseline_path = repo_root / args.baseline
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"mpwlint: wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    fresh = [f for f in findings if f.key not in baseline]
+    n_baselined = len(findings) - len(fresh)
+
+    report = {
+        "findings": [f.to_dict() for f in fresh],
+        "baselined": n_baselined,
+        "count": len(fresh),
+    }
+    if args.output:
+        Path(args.output).write_text(json.dumps(report, indent=2) + "\n")
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+        print(f"mpwlint: {len(fresh)} finding(s)"
+              + (f", {n_baselined} baselined" if n_baselined else ""))
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Layer-1 driver: walk files, run rules, apply inline suppressions."""
+from __future__ import annotations
+
+import subprocess
+from pathlib import Path
+from typing import Iterable, Optional
+
+from tools.mpwlint.findings import Finding, is_suppressed
+from tools.mpwlint.rules import RULES, audit_mpw_verbs, build_context
+
+
+def discover_files(paths: Iterable[str], repo_root: Path) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        path = (repo_root / p) if not Path(p).is_absolute() else Path(p)
+        if path.is_dir():
+            files.extend(sorted(f for f in path.rglob("*.py")
+                                if "__pycache__" not in f.parts))
+        elif path.suffix == ".py" and path.exists():
+            files.append(path)
+    return files
+
+
+def changed_files(repo_root: Path) -> Optional[set[str]]:
+    """Repo-relative paths touched vs HEAD (+ untracked); None if git fails."""
+    try:
+        diff = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"],
+            cwd=repo_root, capture_output=True, text=True, check=True)
+        untracked = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            cwd=repo_root, capture_output=True, text=True, check=True)
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    names = set(diff.stdout.split()) | set(untracked.stdout.split())
+    return {n for n in names if n.endswith(".py")}
+
+
+def _rel(path: Path, repo_root: Path) -> str:
+    try:
+        return path.resolve().relative_to(repo_root.resolve()).as_posix()
+    except ValueError:
+        return path.resolve().as_posix()     # outside the repo: absolute
+
+
+def lint_file(path: Path, repo_root: Path,
+              rules: Optional[Iterable[str]] = None) -> list[Finding]:
+    relpath = _rel(path, repo_root)
+    source = path.read_text()
+    try:
+        ctx = build_context(relpath, source)
+    except SyntaxError as e:
+        return [Finding("R0", relpath, e.lineno or 0,
+                        f"file does not parse: {e.msg}", "fix the syntax")]
+    findings: list[Finding] = []
+    for rule_id, rule in RULES.items():
+        if rules is not None and rule_id not in rules:
+            continue
+        findings.extend(rule(ctx))
+    return [f for f in findings if not is_suppressed(f, ctx.lines)]
+
+
+def lint_paths(paths: Iterable[str], repo_root: Path,
+               rules: Optional[Iterable[str]] = None,
+               only: Optional[set[str]] = None) -> list[Finding]:
+    """Run every Layer-1 rule over the python files under `paths`.
+
+    `only` restricts to a set of repo-relative paths (--changed-only)."""
+    findings: list[Finding] = []
+    linted_api = False
+    for f in discover_files(paths, repo_root):
+        rel = _rel(f, repo_root)
+        if only is not None and rel not in only:
+            continue
+        findings.extend(lint_file(f, repo_root, rules))
+        linted_api = linted_api or rel == "src/repro/core/api.py"
+    if linted_api and (rules is None or "R4" in rules):
+        findings.extend(audit_mpw_verbs(repo_root))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

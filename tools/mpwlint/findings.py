@@ -1,0 +1,70 @@
+"""Finding model, inline suppressions, and the committed baseline."""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, asdict
+from pathlib import Path
+
+# `# mpwlint: disable=R1` or `# mpwlint: disable=R1,R5` or `disable=all`,
+# on the same physical line as the finding.
+_SUPPRESS_RE = re.compile(r"#\s*mpwlint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str          # "R1".."R5", "S1".."S4"
+    path: str          # repo-relative posix path
+    line: int          # 1-based; 0 for whole-module / semantic findings
+    message: str
+    hint: str = ""     # how to fix it
+
+    @property
+    def key(self) -> str:
+        """Baseline identity: line numbers shift, messages don't."""
+        return f"{self.rule}|{self.path}|{self.message}"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: {self.rule}: {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+def suppressed_rules(source_line: str) -> set[str]:
+    """Rule ids disabled by an inline ``# mpwlint: disable=...`` comment."""
+    m = _SUPPRESS_RE.search(source_line)
+    if not m:
+        return set()
+    return {tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+
+
+def is_suppressed(finding: Finding, lines: list[str]) -> bool:
+    if not (1 <= finding.line <= len(lines)):
+        return False
+    rules = suppressed_rules(lines[finding.line - 1])
+    return finding.rule in rules or "all" in rules
+
+
+def load_baseline(path: Path) -> set[str]:
+    """Committed waiver file: a JSON list of finding dicts (or keys)."""
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text() or "[]")
+    entries = data.get("findings", data) if isinstance(data, dict) else data
+    keys: set[str] = set()
+    for e in entries:
+        if isinstance(e, str):
+            keys.add(e)
+        else:
+            keys.add(f"{e['rule']}|{e['path']}|{e['message']}")
+    return keys
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    payload = {"findings": [f.to_dict() for f in findings]}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")

@@ -1,0 +1,434 @@
+"""Layer-1 AST rules.
+
+Each rule is ``rule(ctx) -> list[Finding]`` over one parsed module.  The
+rule ids and what they guard:
+
+  R1  traced-purity      no host side effects (time/random/file IO/self
+                         mutation) inside jit/custom_vjp/shard_map/scanned
+                         functions — they run at trace time, not per step.
+  R2  lock-discipline    in thread-spawning modules, attributes written
+                         from more than one method must be written under a
+                         declared Lock/RLock `with` block.
+  R3  typed-errors       no bare `assert` in library code; ValueErrors in
+                         core/ must name the offending value (no constant
+                         message strings).
+  R4  telemetry-keys     telemetry key literals follow the documented
+                         grammar; every public MPW verb has a docs/api.md
+                         row (checked in engine.py, reported under R4).
+  R5  core-determinism   no wall-clock reads or unseeded RNG in core/
+                         (run-twice determinism is what the chaos and
+                         property suites replay against).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Optional
+
+from tools.mpwlint.findings import Finding
+
+
+@dataclass
+class ModuleContext:
+    relpath: str                   # repo-relative posix path
+    tree: ast.Module
+    lines: list[str]
+    parents: dict = field(default_factory=dict)
+
+    @property
+    def in_core(self) -> bool:
+        return "/core/" in f"/{self.relpath}"
+
+    def parent_chain(self, node: ast.AST):
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+
+def build_context(relpath: str, source: str) -> ModuleContext:
+    tree = ast.parse(source)
+    ctx = ModuleContext(relpath, tree, source.splitlines())
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            ctx.parents[child] = parent
+    return ctx
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# R1: traced purity
+# ---------------------------------------------------------------------------
+
+_TRACE_WRAPPERS = {
+    "jit", "jax.jit", "custom_vjp", "jax.custom_vjp", "custom_jvp",
+    "jax.custom_jvp", "shard_map", "jax.experimental.shard_map.shard_map",
+    "checkpoint", "jax.checkpoint", "remat", "jax.remat",
+}
+
+_WALL_CLOCK_ATTRS = {
+    "time", "monotonic", "perf_counter", "process_time",
+    "time_ns", "monotonic_ns", "perf_counter_ns",
+}
+
+
+def _is_trace_wrapper(expr: ast.AST) -> bool:
+    name = dotted(expr)
+    if name in _TRACE_WRAPPERS:
+        return True
+    if isinstance(expr, ast.Call):
+        fn = dotted(expr.func)
+        if fn in _TRACE_WRAPPERS:
+            return True                      # e.g. @jax.custom_vjp(...) form
+        if fn in ("partial", "functools.partial") and expr.args:
+            return _is_trace_wrapper(expr.args[0])
+    return False
+
+
+def _traced_function_names(tree: ast.Module) -> set[str]:
+    """Names of functions handed to tracers by *call*: lax.scan(f, ...),
+    g = jax.jit(f), f.defvjp(fwd, bwd)."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = dotted(node.func)
+        if fn and (fn.endswith("lax.scan") or fn == "scan"):
+            if node.args and isinstance(node.args[0], ast.Name):
+                names.add(node.args[0].id)
+        elif fn in _TRACE_WRAPPERS:
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    names.add(a.id)
+        elif isinstance(node.func, ast.Attribute) and node.func.attr == "defvjp":
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    names.add(a.id)
+    return names
+
+
+def rule_r1(ctx: ModuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    by_call = _traced_function_names(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        traced = node.name in by_call or any(
+            _is_trace_wrapper(d) for d in node.decorator_list)
+        if not traced:
+            continue
+        out.extend(_scan_traced_body(ctx, node))
+    return out
+
+
+def _scan_traced_body(ctx: ModuleContext, fn: ast.AST) -> list[Finding]:
+    out: list[Finding] = []
+    where = f"traced function `{fn.name}`"
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            root = (name or "").split(".")[0]
+            if root in ("time", "random"):
+                out.append(Finding(
+                    "R1", ctx.relpath, node.lineno,
+                    f"host call `{name}(...)` inside {where}",
+                    "traced code runs once at trace time; hoist the host "
+                    "side effect out of the traced function"))
+            elif name == "open":
+                out.append(Finding(
+                    "R1", ctx.relpath, node.lineno,
+                    f"file IO `open(...)` inside {where}",
+                    "do file IO outside the traced function and pass "
+                    "arrays in"))
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    out.append(Finding(
+                        "R1", ctx.relpath, node.lineno,
+                        f"mutation of `self.{t.attr}` inside {where}",
+                        "traced functions must be pure; return the value "
+                        "and assign it outside the trace"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R2: lock discipline in thread-spawning modules
+# ---------------------------------------------------------------------------
+
+_INIT_METHODS = {"__init__", "__post_init__"}
+
+
+_THREADING_CTORS = {
+    "threading.Thread", "Thread", "threading.Lock", "threading.RLock",
+    "Lock", "RLock", "threading.Condition", "ThreadPoolExecutor",
+    "concurrent.futures.ThreadPoolExecutor",
+}
+
+
+def _spawns_threads(tree: ast.Module) -> bool:
+    """Modules that spawn threads OR declare locks: either way their class
+    state is shared across threads (chaos.py owns no Thread — the mirror
+    thread in replicate.py calls into it — but its IncidentLog lock marks
+    the sharing)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = dotted(node.func)
+            if fn in _THREADING_CTORS:
+                return True
+    return False
+
+
+def _is_lock_expr(expr: ast.AST) -> bool:
+    name = dotted(expr)
+    if not name:
+        return False
+    last = name.split(".")[-1].lower()
+    return "lock" in last or "mutex" in last
+
+
+def _under_lock(ctx: ModuleContext, node: ast.AST) -> bool:
+    for parent in ctx.parent_chain(node):
+        if isinstance(parent, ast.With):
+            if any(_is_lock_expr(item.context_expr) for item in parent.items):
+                return True
+        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            break                            # don't escape the method
+    return False
+
+
+def rule_r2(ctx: ModuleContext) -> list[Finding]:
+    if not _spawns_threads(ctx.tree):
+        return []
+    out: list[Finding] = []
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        # attr -> {method name -> [write nodes]}
+        writes: dict[str, dict[str, list]] = {}
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in ast.walk(meth):
+                if not isinstance(node, (ast.Assign, ast.AugAssign,
+                                         ast.AnnAssign)):
+                    continue
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        writes.setdefault(t.attr, {}).setdefault(
+                            meth.name, []).append(node)
+        for attr, by_meth in writes.items():
+            if len(by_meth) < 2:
+                continue                     # single-writer attrs are fine
+            shared_with = sorted(by_meth)
+            for meth_name, nodes in by_meth.items():
+                if meth_name in _INIT_METHODS:
+                    continue                 # construction precedes sharing
+                for node in nodes:
+                    if _under_lock(ctx, node):
+                        continue
+                    out.append(Finding(
+                        "R2", ctx.relpath, node.lineno,
+                        f"unguarded write to shared `{cls.name}.{attr}` in "
+                        f"`{meth_name}` (also written in "
+                        f"{', '.join(m for m in shared_with if m != meth_name)})",
+                        "this module spawns threads; guard the write with "
+                        "the instance's Lock/RLock (`with self._lock:`)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3: typed errors, no bare asserts
+# ---------------------------------------------------------------------------
+
+def rule_r3(ctx: ModuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assert):
+            out.append(Finding(
+                "R3", ctx.relpath, node.lineno,
+                "bare `assert` in library code",
+                "asserts vanish under `python -O`; raise a typed exception "
+                "(ValueError/RuntimeError) naming the offending values"))
+        elif isinstance(node, ast.Raise) and ctx.in_core:
+            exc = node.exc
+            if (isinstance(exc, ast.Call) and dotted(exc.func) == "ValueError"
+                    and exc.args and isinstance(exc.args[0], ast.Constant)
+                    and isinstance(exc.args[0].value, str)
+                    and not exc.keywords and len(exc.args) == 1):
+                out.append(Finding(
+                    "R3", ctx.relpath, node.lineno,
+                    f"ValueError with a constant message "
+                    f"{exc.args[0].value!r} in core/",
+                    "name the offending shape/knob/key in the message "
+                    "(use an f-string) so operators can act on it"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4: telemetry-key grammar
+# ---------------------------------------------------------------------------
+
+# Templates: each f-string interpolation collapses to `{}`.  The grammar is
+# the one docs/telemetry.md and PathTelemetry document:
+#   {key}                dynamic key, opaque here
+#   {key}/hop{i}:{leg}   per-hop legs
+#   {key}/bkt{i}         per-bucket plans
+#   {key}/intra {key}/wan  hierarchical split
+#   ckpt...              checkpoint paths (constant prefix)
+_KEY_TEMPLATES = {"{}", "{}/hop{}:{}", "{}/bkt{}", "{}/intra", "{}/wan"}
+_TEL_CALLS = {"note_plan", "record", "timed", "note_checksum_error", "path"}
+_TEL_KWARGS = {"tel_key", "tel_prefix"}
+
+
+def _template(expr: ast.AST) -> Optional[str]:
+    """Literal shape of a key expression; None when fully dynamic."""
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+        return expr.value
+    if isinstance(expr, ast.JoinedStr):
+        parts = []
+        for v in expr.values:
+            if isinstance(v, ast.FormattedValue):
+                parts.append("{}")
+            elif isinstance(v, ast.Constant):
+                parts.append(str(v.value))
+        return "".join(parts)
+    return None
+
+
+def _template_ok(tpl: str) -> bool:
+    if tpl in _KEY_TEMPLATES:
+        return True
+    return tpl.startswith("ckpt")            # ckpt:* constant family
+
+
+def rule_r4(ctx: ModuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        key_exprs: list[ast.AST] = []
+        fn = node.func
+        callee = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if callee in _TEL_CALLS and node.args:
+            key_exprs.append(node.args[0])
+        for kw in node.keywords:
+            if kw.arg in _TEL_KWARGS:
+                key_exprs.append(kw.value)
+        for expr in key_exprs:
+            tpl = _template(expr)
+            if tpl is None or _template_ok(tpl):
+                continue
+            out.append(Finding(
+                "R4", ctx.relpath, expr.lineno,
+                f"telemetry key literal {tpl!r} does not match the key "
+                f"grammar",
+                "keys must be `{key}`, `{key}/hop{i}:{leg}`, `{key}/bkt{i}`, "
+                "`{key}/intra`, `{key}/wan`, or a `ckpt*` constant — see "
+                "docs/lint.md#r4"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R5: determinism in core/
+# ---------------------------------------------------------------------------
+
+def rule_r5(ctx: ModuleContext) -> list[Finding]:
+    if not ctx.in_core:
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func) or ""
+        parts = name.split(".")
+        if parts[0] == "time" and len(parts) == 2 \
+                and parts[1] in _WALL_CLOCK_ATTRS:
+            out.append(Finding(
+                "R5", ctx.relpath, node.lineno,
+                f"wall-clock read `{name}()` in core/",
+                "core/ must be run-twice deterministic (the chaos and "
+                "property suites replay it); model time or take it as an "
+                "argument"))
+        elif parts[0] == "datetime" and parts[-1] in ("now", "utcnow",
+                                                      "today"):
+            out.append(Finding(
+                "R5", ctx.relpath, node.lineno,
+                f"wall-clock read `{name}()` in core/",
+                "pass timestamps in from the caller"))
+        elif parts[0] == "random" and len(parts) == 2:
+            out.append(Finding(
+                "R5", ctx.relpath, node.lineno,
+                f"unseeded stdlib RNG `{name}()` in core/",
+                "use a seeded np.random.default_rng(seed) or jax PRNG key"))
+        elif parts[:2] in (["np", "random"], ["numpy", "random"]):
+            if parts[-1] == "default_rng" and (node.args or node.keywords):
+                continue                     # seeded generator: fine
+            out.append(Finding(
+                "R5", ctx.relpath, node.lineno,
+                f"unseeded numpy RNG `{name}()` in core/",
+                "seed it: np.random.default_rng(seed)"))
+    return out
+
+
+RULES: dict[str, Callable[[ModuleContext], list[Finding]]] = {
+    "R1": rule_r1,
+    "R2": rule_r2,
+    "R3": rule_r3,
+    "R4": rule_r4,
+    "R5": rule_r5,
+}
+
+
+# ---------------------------------------------------------------------------
+# R4b: MPW facade verb audit (whole-repo, not per-module — engine calls it)
+# ---------------------------------------------------------------------------
+
+def audit_mpw_verbs(repo_root: Path) -> list[Finding]:
+    """Every public MPW verb must have a `{verb}(` row in docs/api.md."""
+    api_py = repo_root / "src" / "repro" / "core" / "api.py"
+    api_md = repo_root / "docs" / "api.md"
+    if not api_py.exists():
+        return []
+    if not api_md.exists():
+        return [Finding("R4", "docs/api.md", 0,
+                        "docs/api.md is missing but src/repro/core/api.py "
+                        "defines the MPW facade",
+                        "restore the API reference")]
+    doc = api_md.read_text()
+    tree = ast.parse(api_py.read_text())
+    out: list[Finding] = []
+    for cls in ast.walk(tree):
+        if not (isinstance(cls, ast.ClassDef) and cls.name == "MPW"):
+            continue
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if meth.name.startswith("_") or meth.name == "path":
+                continue
+            if f"{meth.name}(" not in doc:
+                out.append(Finding(
+                    "R4", "src/repro/core/api.py", meth.lineno,
+                    f"MPW verb `{meth.name}` has no docs/api.md row",
+                    "add a row to the facade table in docs/api.md"))
+    return out

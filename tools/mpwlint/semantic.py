@@ -1,0 +1,365 @@
+"""Layer 2: semantic plan verifier.
+
+Imports the *real* planners from ``src/repro`` and checks their contracts
+over adversarial config sweeps — the invariants every transfer correctness
+argument in docs/architecture.md rests on:
+
+  S1  chunk coverage       plan_chunks / plan_file_chunks cover exactly the
+                           leaf/file bytes: contiguous, non-overlapping,
+                           byte sums exact (incl. remainder absorption,
+                           0-d leaves, empty files, pinned row geometry).
+  S2  ring wire bound      wire_bytes_per_pod conforms to the 2(P-1)/P
+                           bandwidth-optimal ring bound per algo x
+                           compression x world size.
+  S3  route soundness      route planning over fault schedules never yields
+                           a cycle or a dead hop; unreachable pairs raise
+                           instead of silently mis-routing.
+  S4  bucket bit-identity  plan_buckets tiles the layers dim exactly;
+                           aligned_chunks pins the full leaf's row geometry;
+                           the int8 wire block never exceeds the segment
+                           extent.
+
+Every violation is reported as a Finding (rule S1..S4) against the planner
+module, so the CLI and CI treat both layers uniformly.
+"""
+from __future__ import annotations
+
+import itertools
+import sys
+from pathlib import Path
+
+from tools.mpwlint.findings import Finding
+
+
+def _ensure_src(repo_root: Path) -> None:
+    src = str(repo_root / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def _f(rule: str, path: str, msg: str, hint: str = "") -> Finding:
+    return Finding(rule, path, 0, msg, hint)
+
+
+# ---------------------------------------------------------------------------
+# S1: chunk plans cover exactly the payload bytes
+# ---------------------------------------------------------------------------
+
+def check_chunk_coverage() -> list[Finding]:
+    import numpy as np
+    from repro.core.streams import (chunk_rows, leaf_bytes, normalize_dims,
+                                    plan_chunks)
+
+    out: list[Finding] = []
+    path = "src/repro/core/streams.py"
+    shapes = [(), (1,), (7,), (13,), (64, 48), (3, 5, 7), (1, 1), (2, 1023),
+              (1024,), (5, 3, 2, 7)]
+    leaves = [np.zeros(s, np.float32) for s in shapes]
+    # adversarial dim choices: defaults, last dim, mixed None
+    dim_choices = [None,
+                   [(-1 if l.ndim else None) for l in leaves],
+                   [(0 if i % 2 else None) if l.ndim else None
+                    for i, l in enumerate(leaves)]]
+    for dims_in, chunk_bytes in itertools.product(dim_choices,
+                                                  [1, 64, 1000, 1 << 20]):
+        dims = normalize_dims(leaves, dims_in)
+        for pinned in (False, True):
+            rows = ([chunk_rows(l, d, chunk_bytes)
+                     for l, d in zip(leaves, dims)] if pinned else None)
+            try:
+                chunks = plan_chunks(leaves, dims, chunk_bytes, rows=rows)
+            except Exception as e:      # noqa: BLE001 - report, don't crash
+                out.append(_f("S1", path,
+                              f"plan_chunks raised {type(e).__name__}: {e} "
+                              f"(chunk_bytes={chunk_bytes}, pinned={pinned})"))
+                continue
+            for i, leaf in enumerate(leaves):
+                mine = [c for c in chunks if c.leaf == i]
+                nb = leaf_bytes(leaf)
+                got = sum(c.nbytes for c in mine)
+                if got != nb:
+                    out.append(_f(
+                        "S1", path,
+                        f"chunk bytes {got} != leaf bytes {nb} for shape "
+                        f"{leaf.shape} dim={dims[i]} "
+                        f"chunk_bytes={chunk_bytes} pinned={pinned}",
+                        "the last chunk must absorb the nb//n remainder"))
+                if len(mine) > 1:
+                    spans = sorted((c.start, c.start + c.size) for c in mine)
+                    n = leaf.shape[mine[0].dim]
+                    tiles = (spans[0][0] == 0 and spans[-1][1] == n and all(
+                        a[1] == b[0] for a, b in zip(spans, spans[1:])))
+                    if not tiles:
+                        out.append(_f(
+                            "S1", path,
+                            f"chunk spans {spans} do not tile [0, {n}) for "
+                            f"shape {leaf.shape} chunk_bytes={chunk_bytes}",
+                            "chunks must be contiguous and non-overlapping"))
+    return out
+
+
+def check_file_chunk_coverage() -> list[Finding]:
+    from repro.core.filetransfer import plan_file_chunks
+
+    out: list[Finding] = []
+    path = "src/repro/core/filetransfer.py"
+    sizes = [0, 1, 7, 1 << 16, (1 << 16) + 1, 1023, 10 * (1 << 16) + 3,
+             (1 << 20) - 1]
+    for nbytes, chunk_bytes in itertools.product(sizes,
+                                                 [1, 1 << 16, 1 << 20]):
+        chunks = plan_file_chunks(nbytes, chunk_bytes)
+        eff = max(1 << 16, chunk_bytes)
+        total = sum(c.size for c in chunks)
+        if total != max(0, nbytes):
+            out.append(_f(
+                "S1", path,
+                f"file chunks cover {total} bytes, file has {nbytes} "
+                f"(chunk_bytes={chunk_bytes})"))
+        off = 0
+        for c in chunks:
+            if c.start != off or c.size > eff or c.size != c.nbytes:
+                out.append(_f(
+                    "S1", path,
+                    f"file chunk {c} breaks the contiguous byte-range "
+                    f"contract at offset {off} (nbytes={nbytes}, "
+                    f"chunk_bytes={chunk_bytes})"))
+                break
+            off += c.size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# S2: ring wire-byte bound
+# ---------------------------------------------------------------------------
+
+def check_wire_bound() -> list[Finding]:
+    from repro.core.ring import ALGOS, WIRE_FACTOR, wire_bytes_per_pod
+
+    out: list[Finding] = []
+    path = "src/repro/core/ring.py"
+    tol = 1e-9
+    for payload, world, algo, compress in itertools.product(
+            [0.0, 1.0, 1000.0, float(1 << 20)], [1, 2, 3, 4, 8, 16],
+            (*ALGOS, "shift"), WIRE_FACTOR):
+        w = wire_bytes_per_pod(payload, world, algo=algo, compress=compress)
+        wire = payload * WIRE_FACTOR[compress]
+        if algo == "shift":
+            expect = wire
+        elif world <= 1:
+            expect = 0.0
+        elif algo in ("ring", "ring2") or compress == "none":
+            expect = 2.0 * (world - 1) / world * wire
+        else:
+            expect = (world - 1.0) * wire
+        ctx = (f"payload={payload} world={world} algo={algo} "
+               f"compress={compress}")
+        if abs(w - expect) > tol * max(1.0, expect):
+            out.append(_f(
+                "S2", path,
+                f"wire_bytes_per_pod={w} != {expect} for {ctx}",
+                "ring/psum+none must hit the 2(P-1)/P bound; gather-based "
+                "compressed psum is (P-1); shift ships once"))
+        # the ring algorithms must never exceed the bandwidth-optimal bound
+        if algo in ("ring", "ring2") and \
+                w > 2.0 * (max(world, 1) - 1) / max(world, 1) * wire + tol:
+            out.append(_f(
+                "S2", path,
+                f"ring wire bytes {w} exceed the 2(P-1)/P bound for {ctx}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# S3: routes over fault schedules
+# ---------------------------------------------------------------------------
+
+def _alive_links(topo, step: int):
+    return {(a, b) for (a, b), prof in topo._links.items()
+            if prof.health(step).alive}
+
+
+def _reachable(links: set, src: str, dst: str) -> bool:
+    seen, frontier = {src}, [src]
+    while frontier:
+        u = frontier.pop()
+        for (a, b) in links:
+            if a == u and b not in seen:
+                seen.add(b)
+                frontier.append(b)
+    return dst in seen
+
+
+def check_route_soundness() -> list[Finding]:
+    from repro.core.topology import cosmogrid_topology
+
+    out: list[Finding] = []
+    path = "src/repro/core/topology.py"
+    # deterministic fault schedule on the CosmoGrid star + backup detour:
+    # the light path dies mid-run, the Espoo leg flaps, Edinburgh degrades.
+    def build():
+        t = cosmogrid_topology(pods_per_site=2, backup_links=True)
+        t.connect("amsterdam", "tokyo",
+                  t.link("amsterdam", "tokyo").drop(5, 15))
+        t.connect("amsterdam", "espoo",
+                  t.link("amsterdam", "espoo").drop(8, 10).drop(18, None))
+        t.connect("amsterdam", "edinburgh",
+                  t.link("amsterdam", "edinburgh").degrade(0.25, (3, 12)))
+        return t
+
+    sites = ["amsterdam", "tokyo", "espoo", "edinburgh"]
+    for step in range(0, 22):
+        topo = build()
+        alive = _alive_links(topo, step)
+        for (a, b) in set(topo._links) - alive:
+            topo.fail_link(a, b, bidirectional=False)
+        for src, dst in itertools.permutations(sites, 2):
+            for metric in ("hops", "latency", "width"):
+                ctx = f"{src}->{dst} metric={metric} step={step}"
+                try:
+                    route = topo.route(src, dst, metric)
+                except KeyError:
+                    if _reachable(alive, src, dst):
+                        out.append(_f(
+                            "S3", path,
+                            f"route raised KeyError but {ctx} is reachable "
+                            f"over alive links"))
+                    continue
+                if len(set(route.sites)) != len(route.sites):
+                    out.append(_f(
+                        "S3", path,
+                        f"route {route.sites} revisits a site ({ctx})",
+                        "a routing cycle means the search relaxed a node "
+                        "twice"))
+                if route.sites[0] != src or route.sites[-1] != dst:
+                    out.append(_f(
+                        "S3", path,
+                        f"route {route.sites} has wrong endpoints ({ctx})"))
+                for hop_a, hop_b in zip(route.sites, route.sites[1:]):
+                    if (hop_a, hop_b) not in alive:
+                        out.append(_f(
+                            "S3", path,
+                            f"route {route.sites} crosses dead hop "
+                            f"{hop_a}->{hop_b} ({ctx})",
+                            "the search must skip links whose health(step) "
+                            "is down"))
+    # whole-site loss: the backup detour must carry tokyo<->edinburgh, and
+    # espoo (star leaf) must be honestly unreachable.
+    topo = build()
+    topo.fail_site("amsterdam")
+    try:
+        route = topo.route("tokyo", "edinburgh", "hops")
+        if "amsterdam" in route.sites:
+            out.append(_f("S3", path,
+                          "route crosses the failed amsterdam site"))
+    except KeyError:
+        out.append(_f("S3", path,
+                      "tokyo->edinburgh must heal over the backup link "
+                      "when amsterdam dies"))
+    try:
+        topo.route("tokyo", "espoo", "hops")
+        out.append(_f("S3", path,
+                      "tokyo->espoo routed despite espoo being cut off"))
+    except KeyError:
+        pass
+    return out
+
+
+# ---------------------------------------------------------------------------
+# S4: bucket plans and bit-identity preconditions
+# ---------------------------------------------------------------------------
+
+def check_bucket_contracts() -> list[Finding]:
+    import numpy as np
+    from repro.core.buckets import aligned_chunks, plan_buckets
+    from repro.core.ring import QBLOCK, _wire_block
+    from repro.core.streams import chunk_rows, leaf_bytes, plan_chunks
+
+    out: list[Finding] = []
+    path = "src/repro/core/buckets.py"
+    for nL, bucket_bytes in itertools.product([1, 2, 5, 12, 24],
+                                              [1, 100, 10_000, 1 << 22]):
+        leaves = [np.zeros((nL, 7, 3), np.float32),
+                  np.zeros((nL, 64), np.float32),
+                  np.zeros((11,), np.float32),       # rest leaf
+                  np.zeros((), np.float32)]          # rest leaf, 0-d
+        flags = [True, True, False, False]
+        plan = plan_buckets(leaves, flags, bucket_bytes)
+        ctx = f"nL={nL} bucket_bytes={bucket_bytes}"
+        layer = [b for b in plan.buckets if not b.is_rest]
+        rest = [b for b in plan.buckets if b.is_rest]
+        spans = sorted((b.lo, b.hi) for b in layer)
+        tiles = (not layer) or (spans[0][0] == 0 and spans[-1][1] == nL
+                                and all(a[1] == b[0] for a, b in
+                                        zip(spans, spans[1:])))
+        if not tiles:
+            out.append(_f("S4", path,
+                          f"bucket spans {spans} do not tile [0, {nL}) "
+                          f"({ctx})",
+                          "the lowest bucket must absorb the remainder"))
+        stacked = sum(leaf_bytes(l) for l, f in zip(leaves, flags) if f)
+        restb = sum(leaf_bytes(l) for l, f in zip(leaves, flags) if not f)
+        if sum(b.nbytes for b in layer) != stacked:
+            out.append(_f("S4", path,
+                          f"layer-bucket bytes != stacked bytes ({ctx})"))
+        if sum(b.nbytes for b in rest) != restb:
+            out.append(_f("S4", path,
+                          f"rest-bucket bytes != rest bytes ({ctx})"))
+        # bit-identity precondition: a bucket's chunk geometry along the
+        # scatter dim must equal the full leaf's.
+        dims = [1, 1, None, None]
+        chunk_bytes = 256
+        for b in layer:
+            payload = [leaves[0][b.lo:b.hi], leaves[1][b.lo:b.hi]]
+            idx = [0, 1]
+            sub = aligned_chunks(leaves, payload, idx, dims, chunk_bytes)
+            full = plan_chunks(leaves[:2], dims[:2], chunk_bytes,
+                               rows=[chunk_rows(l, d, chunk_bytes)
+                                     for l, d in zip(leaves[:2], dims[:2])])
+            for li in idx:
+                sub_geo = [(c.start, c.size) for c in sub if c.leaf == li]
+                full_geo = [(c.start, c.size) for c in full if c.leaf == li]
+                if sub_geo != full_geo:
+                    out.append(_f(
+                        "S4", path,
+                        f"bucket [{b.lo},{b.hi}) chunk geometry {sub_geo} "
+                        f"!= full-leaf geometry {full_geo} for leaf {li} "
+                        f"({ctx})",
+                        "aligned_chunks must pin chunk_rows of the FULL "
+                        "leaf"))
+            for c in sub:
+                extent = c.size if c.size else 1
+                if not (1 <= _wire_block(extent) <= max(1, extent)):
+                    out.append(_f(
+                        "S4", "src/repro/core/ring.py",
+                        f"wire block {_wire_block(extent)} exceeds segment "
+                        f"extent {extent} ({ctx})"))
+    for m in [*range(1, 40), 63, 64, 65, QBLOCK - 1, QBLOCK, QBLOCK + 1,
+              10 * QBLOCK]:
+        if _wire_block(m) != max(1, min(QBLOCK, m)):
+            out.append(_f("S4", "src/repro/core/ring.py",
+                          f"_wire_block({m}) != max(1, min(QBLOCK, {m}))",
+                          "short segments must become their own block"))
+    return out
+
+
+CHECKS = {
+    "S1": (check_chunk_coverage, check_file_chunk_coverage),
+    "S2": (check_wire_bound,),
+    "S3": (check_route_soundness,),
+    "S4": (check_bucket_contracts,),
+}
+
+
+def run_semantic(repo_root: Path) -> list[Finding]:
+    _ensure_src(repo_root)
+    out: list[Finding] = []
+    for rule_id, checks in CHECKS.items():
+        for check in checks:
+            try:
+                out.extend(check())
+            except Exception as e:      # noqa: BLE001 - a crash IS a finding
+                out.append(Finding(
+                    rule_id, "tools/mpwlint/semantic.py", 0,
+                    f"{check.__name__} crashed: {type(e).__name__}: {e}",
+                    "the planner API drifted under the verifier; update "
+                    "the contract or fix the planner"))
+    return out
