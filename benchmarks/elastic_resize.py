@@ -1,0 +1,190 @@
+"""Elastic membership: convergence-vs-WAN-bytes for local-SGD K, and the
+cost of losing (then regaining) a site mid-run.
+
+Two halves, mirroring `chaos_recovery`'s split:
+
+* **K-curve (measured)** — real 4-site local-SGD training runs on the
+  emulated CosmoGrid mesh at K ∈ {1, 4, 16}: equal-tolerance final loss at
+  a fraction of the cross-site traffic (WAN bytes are the modeled
+  gateway-ring bytes of `localsgd.reference_wan_bytes`; K=1 *is* the
+  synchronous pipeline).
+* **Site loss (control plane, no devices)** — the lease state machine on
+  the CosmoGrid star: tokyo's only link drops at step S; steps-to-resume
+  is fault -> evict/resize latency (the lease), and the modeled post-resize
+  delta-sync throughput must be no worse than a 3-site fault-free baseline
+  (it is *better* than the pre-fault 4-site world: the dead link was the
+  slowest).
+
+`benchmarks/run.py --json` exports RESULTS (section `elastic`); the
+`*_speedup` / `*throughput*` keys feed `benchmarks/perf_gate.py`.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import cosmogrid_topology
+from repro.core.chaos import IncidentLog
+from repro.core.localsgd import reference_wan_bytes
+from repro.core.membership import SiteMembership
+
+from benchmarks.common import run_multidev
+
+DRY = bool(os.environ.get("WIDEJAX_BENCH_DRY"))
+STEPS = 16 if DRY else 48
+KS = (1, 4, 16)
+FAULT_AT, HEAL_AT = 6, 14
+LOSS_TOL = 0.5
+
+RESULTS: dict = {}
+# the site-loss scenario's incident timeline, exported as a CI artifact
+# (`python -m benchmarks.elastic_resize ELASTIC_timeline.json`)
+TIMELINE: list = []
+
+_K_CURVE = """
+import json
+import jax
+from repro.configs import (get_config, smoke_config, RunConfig, ShapeConfig,
+                           CommConfig, TrainConfig)
+from repro.runtime import Trainer
+from repro.core import cosmogrid_topology
+from repro.data import DataConfig, make_pipeline
+
+STEPS = %(steps)d
+mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+out = {}
+for k in %(ks)r:
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    rc = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+                   comm=CommConfig(mode="hierarchical", streams=4,
+                                   chunk_mb=0.01, autotune=False,
+                                   local_steps=k),
+                   train=TrainConfig(zero1=True, warmup_steps=2,
+                                     total_steps=max(50, STEPS)))
+    data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8), prefetch=0)
+    t = cosmogrid_topology(backup_links=True)
+    with jax.set_mesh(mesh):
+        tr = Trainer(rc, mesh, route=t.route("amsterdam", "tokyo"),
+                     site_groups=t.pod_groups())
+        tr.init_or_restore()
+        hist = tr.run(data, STEPS, log_every=0)
+    out[f"final_loss_k{k}"] = float(hist[-1]["loss"])
+out["n_params"] = cfg.param_count()
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def _k_curve() -> dict:
+    meas = run_multidev(_K_CURVE % {"steps": STEPS, "ks": list(KS)},
+                        timeout=1200)
+    n_params = int(meas["n_params"])
+    res: dict = {}
+    bytes_k = {k: reference_wan_bytes(n_params, STEPS, k, n_sites=4)
+               for k in KS}
+    for k in KS:
+        res[f"final_loss_k{k}"] = meas[f"final_loss_k{k}"]
+        res[f"wan_bytes_k{k}"] = bytes_k[k]
+    for k in KS[1:]:
+        res[f"wan_byte_speedup_k{k}"] = bytes_k[KS[0]] / bytes_k[k]
+        gap = abs(meas[f"final_loss_k{k}"] - meas["final_loss_k1"])
+        if gap >= LOSS_TOL:
+            raise AssertionError(
+                f"K={k} final loss diverged from synchronous by {gap:.3f} "
+                f"(tolerance {LOSS_TOL})")
+        res[f"loss_gap_k{k}"] = gap
+    return res, n_params
+
+
+def _delta_sync_wan_s(topo, members: list, n_params: int, step: int) -> float:
+    """Modeled seconds of one delta sync: every member site's delta share
+    crosses its hub link; the sync completes when the slowest member does."""
+    share = reference_wan_bytes(n_params, 1, 1, len(members))
+    worst = 0.0
+    for name in members:
+        if name == "amsterdam":
+            continue
+        prof = topo.link("amsterdam", name)
+        worst = max(worst, prof.transfer_s(share, step=step))
+    return worst
+
+
+def _site_loss(n_params: int) -> dict:
+    """Lease state machine on the star: fault -> evict -> resize, and the
+    modeled delta-sync throughput before/after the resize."""
+    t = cosmogrid_topology()
+    for a, b in (("amsterdam", "tokyo"), ("tokyo", "amsterdam")):
+        t.connect(a, b, t.link(a, b).drop(FAULT_AT, until=HEAL_AT))
+    log = IncidentLog()
+    mem = SiteMembership(t, "amsterdam", lease_steps=2, rejoin_after=2,
+                         log=log)
+    pre_members = list(mem.members())
+    pre_s = _delta_sync_wan_s(t, pre_members, n_params, step=0)
+    for step in range(HEAL_AT + 4):
+        mem.on_step(step)
+    ev = {e.kind: e for e in log.events()}
+    TIMELINE[:] = [[e.kind, e.subject, e.step] for e in log.events()]
+    steps_to_resume = ev["evict"].step - FAULT_AT
+    resized = [s for s in pre_members if s != "tokyo"]
+    post_s = _delta_sync_wan_s(t, resized, n_params, step=ev["evict"].step + 1)
+    # the 3-site fault-free baseline is the same member set on healthy links
+    t3 = cosmogrid_topology()
+    base_s = _delta_sync_wan_s(t3, resized, n_params, step=0)
+    return {
+        "steps_to_detect": ev["detect"].step - FAULT_AT,
+        "steps_to_resume": steps_to_resume,
+        "rejoin_step": ev["join"].step,
+        "post_resize_throughput_ratio": base_s / post_s,
+        "resize_speedup_vs_presize": pre_s / post_s,
+    }
+
+
+def run() -> str:
+    curve, n_params = _k_curve()
+    loss = _site_loss(n_params)
+    if loss["post_resize_throughput_ratio"] < 0.999:
+        raise AssertionError(
+            f"post-resize throughput fell below the 3-site baseline: "
+            f"{loss['post_resize_throughput_ratio']:.3f}")
+    RESULTS.update(curve)
+    RESULTS.update(loss)
+    rows = "\n".join(
+        f"| {k} | {curve[f'final_loss_k{k}']:.4f} | "
+        f"{curve[f'wan_bytes_k{k}'] / 1e9:.2f} GB | "
+        f"{curve[f'wan_bytes_k1'] / curve[f'wan_bytes_k{k}']:.0f}x |"
+        for k in KS)
+    return "\n".join([
+        "## Elastic resize: local-SGD K-curve and site-loss recovery",
+        "",
+        f"{STEPS} steps, 4-site CosmoGrid, measured losses on the emulated "
+        "mesh; WAN bytes are the modeled gateway-ring traffic.",
+        "",
+        "| K | final loss | WAN bytes | traffic reduction |",
+        "|---|---|---|---|",
+        rows,
+        "",
+        "Site loss (tokyo's only link drops at step "
+        f"{FAULT_AT}, heals at {HEAL_AT}):",
+        "",
+        "| metric | value |",
+        "|---|---|",
+        f"| steps to detect (suspect) | {loss['steps_to_detect']} |",
+        f"| steps to resume (evict + resize) | {loss['steps_to_resume']} |",
+        f"| rejoin step (replica catch-up) | {loss['rejoin_step']} |",
+        f"| post-resize throughput vs 3-site baseline | "
+        f"{loss['post_resize_throughput_ratio']:.2f}x |",
+        f"| post-resize speedup vs pre-fault 4-site | "
+        f"{loss['resize_speedup_vs_presize']:.2f}x |",
+    ])
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    print(run())
+    if len(sys.argv) > 1:   # CI artifact: results + incident timeline
+        with open(sys.argv[1], "w") as f:
+            json.dump({"results": RESULTS, "timeline": TIMELINE}, f,
+                      indent=2, default=float)
+        print(f"\n_(timeline written to {sys.argv[1]})_")

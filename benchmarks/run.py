@@ -25,7 +25,7 @@ def main():
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,bloodflow,overlap,streams,"
                          "autotune,multihop,ring,filetransfer,"
-                         "chaos_recovery,roofline")
+                         "chaos_recovery,elastic,roofline")
     ap.add_argument("--dry", action="store_true",
                     help="tiny payloads / few iterations (CI smoke mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -49,6 +49,8 @@ def main():
                          "WAN file transfer (mpw-cp) over WidePath"),
         "chaos_recovery": ("benchmarks.chaos_recovery",
                            "chaos detection & recovery latency"),
+        "elastic": ("benchmarks.elastic_resize",
+                    "local-SGD K-curve & elastic world resize"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)

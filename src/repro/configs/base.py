@@ -193,6 +193,11 @@ class CommConfig:
     # optimizer — see repro/core/buckets.py.  0 disables bucketing (one
     # whole-tree sync, the pre-bucketing behaviour).
     bucket_mb: float = 0.0
+    # local-SGD cadence (beyond-paper elasticity, see repro/core/localsgd.py):
+    # K > 1 keeps each step's gradient sync site-local and ships a model
+    # *delta* across the WAN only every K-th step.  1 (default) is fully
+    # synchronous — bit-identical to the pre-elastic behaviour.
+    local_steps: int = 1
 
 
 @dataclass(frozen=True)

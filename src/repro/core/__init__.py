@@ -28,6 +28,7 @@ from repro.core.collectives import (  # noqa: F401
     flat_allreduce,
     gateway_allreduce,
     hierarchical_allreduce,
+    local_site_allreduce,
     site_allreduce,
     streamed_psum,
     wide_allreduce,
@@ -48,6 +49,8 @@ from repro.core.filetransfer import (  # noqa: F401
     local_transfer,
     plan_file_chunks,
 )
+from repro.core.localsgd import LocalSGDController  # noqa: F401
+from repro.core.membership import QuorumPolicy, SiteMembership  # noqa: F401
 from repro.core.overlap import accum_grads  # noqa: F401
 from repro.core.path import (  # noqa: F401
     ICI,
@@ -57,6 +60,7 @@ from repro.core.path import (  # noqa: F401
     WidePath,
     local_path,
 )
+from repro.core.retry import PROBE_RETRY, RetryPolicy, RetryState  # noqa: F401
 from repro.core.ring import (  # noqa: F401
     ring_all_gather,
     ring_allreduce,

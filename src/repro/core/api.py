@@ -52,6 +52,7 @@ _PATH_IDS = itertools.count()
 class MPW:
     """One MPWide session (MPW_Init .. MPW_Finalize)."""
     paths: dict[int, _PathState] = field(default_factory=dict)
+    membership: Optional[object] = None   # SiteMembership, via Membership()
 
     # -- lifecycle ---------------------------------------------------------
     @staticmethod
@@ -159,6 +160,29 @@ class MPW:
     def setWin(self, pid: int, nbytes: int) -> None:
         # TCP window -> chunk payload sizing against the link BDP
         self.setChunkSize(pid, nbytes)
+
+    def setLocalSteps(self, pid: int, k: int) -> None:
+        """Select the local-SGD cadence (beyond the C API): K > 1 keeps
+        each step's gradient sync inside the site and ships a model delta
+        across the WAN only every K-th step (repro/core/localsgd.py); 1
+        restores the fully synchronous sync.  A Trainer built from this
+        path's CommConfig picks the cadence up at build time."""
+        if k < 1:
+            raise ValueError(f"local steps must be >= 1, got {k}")
+        self.paths[pid].path = self.paths[pid].path.with_(local_steps=int(k))
+
+    def Membership(self, topo, coordinator: str, **kw):
+        """Attach elastic site membership (beyond the C API): lease-based
+        liveness probed over `topo`'s links from the `coordinator` site,
+        monotonic epochs, quorum, evict/rejoin — see
+        repro/core/membership.py.  Keyword args pass through to
+        :class:`~repro.core.membership.SiteMembership` (lease_steps,
+        rejoin_after, quorum, retry, seed, ...).  The session keeps the
+        instance (``self.membership``) so a Trainer and a ChaosMonitor can
+        share it; calling again replaces it."""
+        from repro.core.membership import SiteMembership
+        self.membership = SiteMembership(topo, coordinator, **kw)
+        return self.membership
 
     def setAutoTuning(self, pid: int, enabled: bool,
                       payload_bytes: Optional[int] = None, *,

@@ -37,12 +37,14 @@ possible.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 from statistics import median
 from typing import Callable, Optional
 
 from repro.core import telemetry as tel
 from repro.core.autotune import _lcg01, simulate_hop_s
+from repro.core.retry import RetryPolicy
 from repro.core.topology import Route, Topology
 
 
@@ -57,6 +59,7 @@ class Incident:
     kind: str
     subject: str                  # "a->b" link or route the event is about
     detail: dict = field(default_factory=dict)
+    seq: int = 0                  # global arrival order (capped-log merge key)
 
 
 class IncidentLog:
@@ -72,28 +75,68 @@ class IncidentLog:
       * ``failover`` — no route left: the trainer fell back to its replica
       * ``recover``  — the system has been healthy for the post-heal window;
                        `detail["latency_steps"]` is recover - inject
+      * ``evict``    — a site's liveness lease expired: removed from the
+                       membership (``core/membership.py``)
+      * ``join``     — a site (re)joined the membership
+      * ``leave``    — a site left gracefully (drained, not evicted)
+      * ``resize``   — the trainer re-formed its world on an epoch change
+      * ``catchup``  — a rejoining site restored state from the replica
+
+    Storage is a capped ring buffer *per kind*: the first `keep_first` and
+    last `keep_last` events of each kind are retained, the middle is
+    dropped (counted in :meth:`dropped`).  A million-step run with a
+    flapping link keeps ``MPW.Report(formatted=True)`` O(1) instead of
+    accumulating one row per flap; short runs (fewer than
+    ``keep_first + keep_last`` events per kind — every golden-timeline
+    test) see the identical, complete timeline.
     """
 
     KINDS = ("inject", "detect", "replan", "retune", "requeue", "failover",
-             "recover")
+             "recover", "evict", "join", "leave", "resize", "catchup")
 
-    def __init__(self) -> None:
+    def __init__(self, keep_first: int = 64, keep_last: int = 64) -> None:
         self._lock = threading.Lock()
-        self._events: list[Incident] = []
+        self.keep_first = max(1, int(keep_first))
+        self.keep_last = max(1, int(keep_last))
+        self._seq = 0
+        self._head: dict[str, list] = {}
+        self._tail: dict[str, deque] = {}
+        self._dropped: dict[str, int] = {}
 
     def add(self, step: int, kind: str, subject: str,
             detail: Optional[dict] = None) -> Incident:
         if kind not in self.KINDS:
             raise ValueError(f"unknown incident kind {kind!r}")
-        ev = Incident(int(step), kind, subject, dict(detail or {}))
         with self._lock:
-            self._events.append(ev)
+            self._seq += 1
+            ev = Incident(int(step), kind, subject, dict(detail or {}),
+                          self._seq)
+            head = self._head.setdefault(kind, [])
+            if len(head) < self.keep_first:
+                head.append(ev)
+            else:
+                tail = self._tail.setdefault(
+                    kind, deque(maxlen=self.keep_last))
+                if len(tail) == self.keep_last:
+                    self._dropped[kind] = self._dropped.get(kind, 0) + 1
+                tail.append(ev)
         return ev
 
     def events(self, kind: Optional[str] = None) -> list:
         with self._lock:
-            evs = list(self._events)
+            evs = []
+            for k, head in self._head.items():
+                evs.extend(head)
+                evs.extend(self._tail.get(k, ()))
+        evs.sort(key=lambda e: e.seq)      # global arrival order
         return [e for e in evs if e.kind == kind] if kind else evs
+
+    def dropped(self, kind: Optional[str] = None) -> int:
+        """Events elided by the ring buffer (0 on any short run)."""
+        with self._lock:
+            if kind is not None:
+                return self._dropped.get(kind, 0)
+            return sum(self._dropped.values())
 
     def timeline(self) -> list[dict]:
         """JSON-friendly rows (what ``MPW.Incidents()`` returns and the CI
@@ -116,11 +159,18 @@ class IncidentLog:
         for e in evs:
             det = " ".join(f"{k}={e.detail[k]}" for k in sorted(e.detail))
             rows.append(f"| {e.step} | {e.kind} | {e.subject} | {det} |")
+        n_drop = self.dropped()
+        if n_drop:
+            rows.append(f"| … | (elided) | — | {n_drop} events dropped by "
+                        f"the ring buffer |")
         return "\n".join(rows)
 
     def clear(self) -> None:
         with self._lock:
-            self._events.clear()
+            self._seq = 0
+            self._head.clear()
+            self._tail.clear()
+            self._dropped.clear()
 
 
 _LOG = IncidentLog()
@@ -147,34 +197,56 @@ class ChaosDetector:
     A mild degrade below the collapse factor deliberately does *not* fire:
     slow-but-alive links are the online tuner's job; re-routing is reserved
     for collapse and death.
+
+    Hysteresis: a fired key stays latched while samples are unhealthy, but
+    `rearm_after` *consecutive healthy* samples un-latch it — a path that
+    healed (link restored, detour absorbed the traffic) can alarm again on
+    a later, distinct fault instead of going permanently blind.
     """
 
     def __init__(self, collapse: float = 8.0, window: int = 3,
                  min_baseline: int = 2,
-                 abs_timeout_s: Optional[float] = None) -> None:
+                 abs_timeout_s: Optional[float] = None,
+                 rearm_after: int = 8) -> None:
         self.collapse = float(collapse)
         self.window = max(1, int(window))
         self.min_baseline = max(1, int(min_baseline))
         self.abs_timeout_s = abs_timeout_s
+        self.rearm_after = max(1, int(rearm_after))
         self._state: dict[str, dict] = {}
+
+    def _anomalous(self, st: dict, seconds: float) -> bool:
+        if self.abs_timeout_s is not None and seconds >= self.abs_timeout_s:
+            return True
+        if len(st["good"]) >= self.min_baseline:
+            return seconds >= self.collapse * max(median(st["good"]), 1e-12)
+        return False
 
     def observe(self, key: str, seconds: float) -> bool:
         """Feed one sample; True exactly when the key trips the detector."""
         st = self._state.setdefault(
-            key, {"good": [], "bad": 0, "fired": False})
-        if st["fired"]:
-            return False
+            key, {"good": [], "bad": 0, "fired": False, "heal": 0})
         seconds = float(seconds)
-        if self.abs_timeout_s is not None and seconds >= self.abs_timeout_s:
-            bad = True
-        elif len(st["good"]) >= self.min_baseline:
-            bad = seconds >= self.collapse * max(median(st["good"]), 1e-12)
-        else:
-            bad = False
+        bad = self._anomalous(st, seconds)
+        if st["fired"]:
+            # latched: never re-fire on the *same* incident, but count
+            # healthy samples toward re-arming (hysteresis)
+            if bad:
+                st["heal"] = 0
+                return False
+            st["heal"] += 1
+            st["good"].append(seconds)
+            del st["good"][:-32]
+            if st["heal"] >= self.rearm_after:
+                st["fired"] = False
+                st["bad"] = 0
+                st["heal"] = 0
+            return False
         if bad:
             st["bad"] += 1
             if st["bad"] >= self.window:
                 st["fired"] = True
+                st["heal"] = 0
                 return True
         else:
             st["bad"] = 0
@@ -217,6 +289,13 @@ class ChaosMonitor:
          left means ``failover_to_replica``;
       4. after `recover_after` consecutive healthy steps, record the
          ``recover`` event with the incident's latency in steps.
+
+    With a :class:`~repro.core.membership.SiteMembership` attached
+    (``membership=``), the monitor also escalates: every detected fault
+    marks the sites behind the dead hop *suspect* (their lease clock
+    starts), and the membership's own per-step probing evicts them when
+    the fault outlives the lease — the trainer then resizes its world
+    instead of hammering a dead site forever.
     """
 
     def __init__(self, topo: Topology, src: str, dst: str, *,
@@ -225,6 +304,7 @@ class ChaosMonitor:
                  log: Optional[IncidentLog] = None,
                  payload_bytes: Optional[int] = None,
                  timeout_s: float = 30.0, recover_after: int = 2,
+                 membership=None,
                  seed: int = 0) -> None:
         self.topo = topo
         self.src, self.dst = src, dst
@@ -236,6 +316,7 @@ class ChaosMonitor:
         self.log = log or get_incident_log()
         self.payload_bytes = payload_bytes
         self.recover_after = max(1, int(recover_after))
+        self.membership = membership
         self.seed = int(seed)
         self._injected: set[tuple] = set()
         self._inject_ticks: dict[str, tuple] = {}   # subject -> (step, tick)
@@ -254,6 +335,11 @@ class ChaosMonitor:
         with self._state_lock:
             self._tick += 1
         step = trainer.step
+        if self.membership is not None:
+            # liveness probing runs even while failed over (route None):
+            # lease expiry and rejoin detection must not stall with the
+            # data plane
+            self.membership.on_step(step)
         self._heal_progress(trainer, step)
         route = trainer.route
         if route is None:                 # failed over: nothing to watch
@@ -319,6 +405,12 @@ class ChaosMonitor:
                 new_route = self.topo.route(self.src, self.dst, self.metric)
             except (KeyError, ValueError):
                 new_route = None
+        if self.membership is not None:
+            # escalate: the far endpoint and every partitioned site start
+            # their lease clock; membership probing evicts them if the
+            # fault outlives the lease
+            for site in {b, *health.partitioned} - {self.src}:
+                self.membership.suspect(site, step, reason="route-fault")
         inject_step, inject_tick = self._inject_ticks.get(
             subject, (step, self._tick))
         if new_route is not None:
@@ -414,7 +506,8 @@ def link_fault_hook(route: Route, clock: Callable[[], int],
 def healing_transfer(topo: Topology, src: str, dst: str, *,
                      comm=None, metric: str = "latency",
                      clock: Optional[Callable[[], int]] = None,
-                     log: Optional[IncidentLog] = None, **engine_kw):
+                     log: Optional[IncidentLog] = None,
+                     retry: Optional[RetryPolicy] = None, **engine_kw):
     """A self-healing mpw-cp engine over ``topo``'s ``src -> dst`` route.
 
     The engine's ``fault_hook`` applies the route profiles' fault schedules
@@ -426,6 +519,12 @@ def healing_transfer(topo: Topology, src: str, dst: str, *,
     exhaustion -> replan -> requeue).  When no detour exists the callback
     declines and :class:`~repro.core.filetransfer.ChecksumError` propagates
     as before.
+
+    Retry behavior (per-chunk CRC re-reads *and* the pause before a
+    requeue lands on the replanned route) follows one
+    :class:`~repro.core.retry.RetryPolicy` — exponential backoff instead
+    of the old immediate-requeue hammering of a degraded link; the
+    modeled backoff seconds appear in the ``requeue`` incident detail.
     """
     from repro.configs.base import CommConfig
     from repro.core.filetransfer import FileTransfer
@@ -433,10 +532,12 @@ def healing_transfer(topo: Topology, src: str, dst: str, *,
 
     ilog = log or get_incident_log()
     clock = clock or (lambda: 0)
+    retry = retry or RetryPolicy(
+        max_attempts=engine_kw.pop("max_retries", 3) + 1)
     route = topo.route(src, dst, metric)
     base = WidePath(axis="pod", comm=comm or CommConfig(),
                     name=f"heal-{src}-{dst}")
-    state = {"route": route}
+    state = {"route": route, "reroute_n": 0}
 
     def reroute(engine, failed_hop: int) -> bool:
         r = state["route"]
@@ -461,11 +562,14 @@ def healing_transfer(topo: Topology, src: str, dst: str, *,
         engine.fault_hook = link_fault_hook(new_route, clock, log=ilog)
         if engine.tuner is not None:
             engine.tuner.abort_probe()
+        state["reroute_n"] += 1
+        backoff = retry.delay_s(state["reroute_n"], key=failed_hop)
         ilog.add(step, "requeue", f"{src}->{dst}",
-                 {"hops": new_route.n_hops})
+                 {"hops": new_route.n_hops,
+                  "backoff_s": round(backoff, 4)})
         return True
 
     engine = FileTransfer(base.with_hops(route.as_hops(base_comm=comm)),
-                          reroute=reroute, **engine_kw)
+                          reroute=reroute, retry=retry, **engine_kw)
     engine.fault_hook = link_fault_hook(route, clock, log=ilog)
     return engine

@@ -297,6 +297,52 @@ def hierarchical_allreduce(tree, path: WidePath, data_axes: Sequence[str],
     return jax.tree.unflatten(treedef, out)
 
 
+def local_site_allreduce(tree, path: WidePath, data_axes: Sequence[str],
+                         dims, keep_scattered: bool = False,
+                         site_groups=None):
+    """The local-SGD step sync: RS(data) -> *intra-site* pod psum -> AG(data).
+
+    Identical to :func:`hierarchical_allreduce` except the cross-pod stage
+    never leaves the site: with `site_groups` the pod psum is grouped per
+    site (fast LAN links only), so pods within one site stay bit-identical
+    while sites diverge until the next K-step delta sync merges them (see
+    ``repro/core/localsgd.py``).  Without `site_groups` the whole pod axis
+    is one site and this degenerates to a full sync.  No WAN bytes, no
+    chunking — there is nothing to stream over a LAN-only reduction.
+    """
+    data_axes = manual_axes_present(*data_axes)
+    leaves, treedef = jax.tree.flatten(tree)
+    dim_list = jax.tree.leaves(dims, is_leaf=lambda x: x is None)
+
+    def rs(g, d):
+        if not data_axes:
+            return g
+        if d is None or g.ndim == 0 or g.shape[d] % _axes_size(data_axes) != 0:
+            return jax.lax.psum(g, data_axes)
+        return _psum_scatter_nd(g, d, data_axes)
+
+    scat = [rs(g, d) for g, d in zip(leaves, dim_list)]
+    if path.axis in manual_axes_present(path.axis):
+        groups = ([list(g) for g in site_groups] if site_groups is not None
+                  else None)
+        if groups is not None and len({len(g) for g in groups}) > 1:
+            raise ValueError(
+                f"local_site_allreduce needs equal pods per site, got sizes "
+                f"{[len(g) for g in groups]}")
+        scat = [jax.lax.psum(g, path.axis, axis_index_groups=groups)
+                for g in scat]
+    if keep_scattered:
+        return jax.tree.unflatten(treedef, scat)
+
+    def ag(g, g0, d):
+        if not data_axes or d is None or g.shape == g0.shape:
+            return g
+        return _all_gather_nd(g, d, data_axes)
+
+    out = [ag(g, g0, d) for g, g0, d in zip(scat, leaves, dim_list)]
+    return jax.tree.unflatten(treedef, out)
+
+
 def gateway_allreduce(tree, path: WidePath, data_axes: Sequence[str]):
     """The user-space Forwarder: front-end group relays all WAN traffic."""
     data_axes = manual_axes_present(*data_axes)

@@ -54,6 +54,7 @@ from repro.core import streams as st
 from repro.core import telemetry as tel
 from repro.core.autotune import OnlineTuner, simulate_transfer_s
 from repro.core.path import WidePath
+from repro.core.retry import RetryPolicy
 from repro.core.streams import Chunk
 
 PART_SUFFIX = ".part"
@@ -122,6 +123,7 @@ class FileResult:
     sent: int = 0                 # chunks shipped this run
     skipped: int = 0              # chunks already complete (resume)
     retries: int = 0              # checksum-mismatch re-queues
+    backoff_s: float = 0.0        # modeled RetryPolicy delay before re-sends
     wire_bytes: int = 0           # post-compression bytes, summed over hops
     hop_wire_bytes: list = field(default_factory=list)
     modeled_s: float = 0.0        # store-and-forward sum of hop times
@@ -157,6 +159,13 @@ class FileTransfer:
     False, or `reroute=None`, propagates :class:`ChecksumError` as before.
     At most `max_reroutes` replans per job.  Reroute is not supported for
     ``reverse`` transfers.
+
+    `retry` is the chunk re-queue schedule (a :class:`~repro.core.retry.
+    RetryPolicy`): a chunk that fails its CRC backs off per the policy's
+    modeled delays (accounted in ``FileResult.backoff_s``) instead of
+    hammering the degraded link with an immediate re-send.  When omitted,
+    one is derived from `max_retries` (``max_attempts = max_retries + 1``);
+    when given, it wins and `max_retries` is ignored.
     """
 
     def __init__(self, path: WidePath, *, tuner: Optional[OnlineTuner] = None,
@@ -164,12 +173,16 @@ class FileTransfer:
                  record: bool = True, digest: bool = True,
                  fault_hook: Optional[Callable] = None,
                  reroute: Optional[Callable] = None,
-                 max_reroutes: int = 2) -> None:
+                 max_reroutes: int = 2,
+                 retry: Optional[RetryPolicy] = None) -> None:
         self.path = path
         self.tuner = tuner
         self.reroute = reroute
         self.max_reroutes = max(0, int(max_reroutes))
-        self.max_retries = max(0, int(max_retries))
+        self.retry = retry or RetryPolicy(
+            max_attempts=max(0, int(max_retries)) + 1)
+        # kept consistent with the policy for callers that read it
+        self.max_retries = self.retry.max_attempts - 1
         self.record = record
         # guards post-job path retunes: the DataGather mirror thread and a
         # caller-driven replicate_now() can drive the same engine
@@ -244,7 +257,10 @@ class FileTransfer:
                     hw = res.hop_wire_bytes
                 path_now = self.path
                 failed_hop = order_now[0] if order_now else 0
-                for _attempt in range(self.max_retries + 1):
+                for _delay in self.retry.schedule(key=c.leaf):
+                    if _delay:
+                        with lock:      # modeled backoff before the re-send
+                            res.backoff_s += _delay
                     try:
                         with open(job.src, "rb") as f:
                             f.seek(c.start)

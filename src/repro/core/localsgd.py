@@ -1,0 +1,167 @@
+"""Local-SGD over the WAN: K site-local steps, one cross-site delta sync.
+
+MPWide's CosmoGrid runs paid the WAN price every coupling step.  The
+ROADMAP's "asynchronous multi-site training" item asks for the obvious
+escape hatch: let every site take ``K`` fully local optimizer steps (the
+per-step gradient sync stays inside the site — :func:`~repro.core.
+collectives.local_site_allreduce`), then reconcile the sites by shipping
+one **model delta** across the WAN:
+
+    merged = anchor + mean_over_member_sites(params_site - anchor)
+
+where `anchor` is the params snapshot at the previous reconciliation.
+The delta — not the raw params — crosses the wire because deltas after a
+few local steps are small and near-zero-centred, exactly what the int8
+block codec quantizes best; and the exchange rides the *same* machinery
+as a gradient sync (:func:`~repro.core.collectives.streamed_psum` over
+the membership's gateway subgroup: ring/int8/chunking/streams/pacing all
+apply).
+
+Elasticity: the member set comes from :class:`~repro.core.membership.
+SiteMembership` at the current epoch.  Non-member pods contribute zero
+to — and take nothing from — the merge: an evicted site's params freeze
+where they were, and :func:`catchup` later clones a survivor's state
+onto it when it rejoins.
+
+K = 1 is *defined* as the synchronous path: the Trainer dispatches to
+the ordinary per-step hierarchical sync, so local-SGD at K=1 is
+bit-identical to the pre-elastic behaviour by construction (no float
+re-association to reason about).
+
+Everything here is traced inside the runtime's shard_map (manual over
+the DP axes); the numpy `reference_*` twins below are the executable
+spec the property tests check the traced versions against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collectives import streamed_psum
+from repro.core.path import WidePath
+from repro.sharding import manual_axes_present
+
+
+class LocalSGDController:
+    """The K-step cadence: which steps are sync steps.
+
+    Steps are 0-based; with ``k=4`` the sync lands on steps 3, 7, 11, ...
+    — i.e. *after* every K-th local step, so a run of N = m*K steps does
+    exactly m reconciliations.  ``k <= 1`` means every step syncs (the
+    synchronous path; the Trainer never builds a delta-sync for it).
+    """
+
+    def __init__(self, k: int = 1) -> None:
+        self.k = max(1, int(k))
+
+    @property
+    def enabled(self) -> bool:
+        return self.k > 1
+
+    def is_sync_step(self, step: int) -> bool:
+        return self.k <= 1 or (step + 1) % self.k == 0
+
+
+def delta_sync(params, anchor, path: WidePath, *, dims=None,
+               site_groups=None, member_pods=None, member_gateways=None):
+    """Traced body of one cross-site reconciliation (call inside shard_map).
+
+    `member_pods` / `member_gateways` / `site_groups` are trace-time
+    constants from the membership at the current epoch (the Trainer
+    re-traces on every epoch change).  Stages:
+
+      1. per-pod f32 delta against the anchor, masked so only *member
+         gateways* contribute (each member site's pods are bit-identical
+         after K local steps, so the gateway's delta is the site's);
+      2. :func:`streamed_psum` of the masked deltas with
+         ``subgroup=member_gateways`` — the WAN exchange, on the path's
+         ring/int8/chunk/stream knobs, accounted under ``{key}/delta``;
+      3. re-mask to member gateways (ring lanes outside the subgroup come
+         back holding garbage) and an intra-site grouped psum broadcasts
+         each site's gateway value to its pods;
+      4. merge ``anchor + sum/n_members`` on member pods only — evicted
+         and departed pods keep their local params untouched.
+    """
+    if path.axis not in manual_axes_present(path.axis):
+        return params
+    groups = [list(g) for g in site_groups]
+    gw = [int(g) for g in member_gateways]
+    n = len(gw)
+    idx = jax.lax.axis_index(path.axis)
+    is_m = jnp.any(idx == jnp.asarray(sorted(member_pods), jnp.int32))
+    is_gw = jnp.any(idx == jnp.asarray(gw, jnp.int32))
+
+    def to_delta(p, a):
+        d = p.astype(jnp.float32) - a.astype(jnp.float32)
+        return jnp.where(is_gw, d, jnp.zeros_like(d))
+
+    masked = jax.tree.map(to_delta, params, anchor)
+    exchanged = streamed_psum(masked, path, dims=dims,
+                              subgroup=gw, tel_key=f"{path.key}/delta")
+    gw_only = jax.tree.map(lambda d: jnp.where(is_gw, d, jnp.zeros_like(d)),
+                           exchanged)
+    summed = jax.tree.map(
+        lambda d: jax.lax.psum(d, path.axis, axis_index_groups=groups),
+        gw_only)
+
+    def merge(p, a, s):
+        m = a.astype(jnp.float32) + s / n
+        return jnp.where(is_m, m, p.astype(jnp.float32)).astype(p.dtype)
+
+    return jax.tree.map(merge, params, anchor, summed)
+
+
+def catchup(params, path: WidePath, *, source_pod: int, target_pods,
+            site_groups=None):
+    """Clone a survivor's params onto rejoining pods (call inside shard_map).
+
+    The rejoined site missed every reconciliation while evicted; before it
+    can contribute a delta it must share the survivors' anchor.  On a real
+    deployment this is the replica checkpoint restore (``failover_to_
+    replica``); inside the emulated mesh it is a broadcast: mask params to
+    `source_pod` (a surviving gateway), psum over the pod axis, and adopt
+    the result on `target_pods` only.  Survivors' params pass through
+    bit-untouched.
+    """
+    if path.axis not in manual_axes_present(path.axis):
+        return params
+    del site_groups  # broadcast is axis-wide; kept for signature symmetry
+    idx = jax.lax.axis_index(path.axis)
+    is_src = idx == jnp.int32(source_pod)
+    is_tgt = jnp.any(idx == jnp.asarray(sorted(target_pods), jnp.int32))
+
+    def clone(p):
+        src = jnp.where(is_src, p.astype(jnp.float32), jnp.zeros_like(p, jnp.float32))
+        bcast = jax.lax.psum(src, path.axis)
+        return jnp.where(is_tgt, bcast, p.astype(jnp.float32)).astype(p.dtype)
+
+    return jax.tree.map(clone, params)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference twins (the property-test spec)
+# ---------------------------------------------------------------------------
+
+def reference_delta_merge(anchor, site_params, members):
+    """What one reconciliation does, per site, in plain numpy.
+
+    `site_params` maps site name -> params array; `members` is the live
+    member list.  Returns the post-sync params per site: members get
+    ``anchor + mean(member deltas)``, non-members keep their own.
+    """
+    deltas = [np.asarray(site_params[m], np.float32) - np.asarray(anchor, np.float32)
+              for m in members]
+    merged = np.asarray(anchor, np.float32) + np.mean(deltas, axis=0)
+    return {s: (merged if s in members else np.asarray(p))
+            for s, p in site_params.items()}
+
+
+def reference_wan_bytes(n_params: int, steps: int, k: int, n_sites: int,
+                        bytes_per_el: int = 4) -> int:
+    """Modeled cross-site WAN bytes of a run: one gateway-subgroup
+    exchange of the full model every K steps (ring: ~2 passes of the
+    payload per member), versus every step when k=1."""
+    syncs = steps // max(1, k)
+    per_sync = 2 * (n_sites - 1) / max(1, n_sites) * n_params * bytes_per_el
+    return int(syncs * per_sync)

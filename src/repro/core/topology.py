@@ -289,6 +289,25 @@ class Topology:
         self._down.update(hit)
         return hit
 
+    def restore_site(self, name: str) -> list:
+        """Undo :meth:`fail_site`: links touching `name` come back, except
+        those whose *other* endpoint is itself still failed (all of that
+        site's links down) — a rejoining site must not silently resurrect a
+        still-dead peer.  Returns the directed pairs restored."""
+        if name not in self._sites:
+            raise KeyError(f"unknown site {name!r}")
+
+        def site_dead(s: str) -> bool:
+            touching = [(a, b) for (a, b) in self._links if s in (a, b)]
+            return bool(touching) and all(p in self._down for p in touching)
+
+        dead_peers = {s for s in self._sites
+                      if s != name and site_dead(s)}
+        hit = [(a, b) for (a, b) in self._down
+               if name in (a, b) and not ({a, b} & dead_peers)]
+        self._down.difference_update(hit)
+        return hit
+
     def is_down(self, a: str, b: str) -> bool:
         return (a, b) in self._down
 

@@ -65,6 +65,16 @@ def main():
     ap.add_argument("--chaos-drop", type=int, default=None, metavar="STEP",
                     help="drop the route's direct link at STEP and attach "
                          "the self-healing ChaosMonitor (re-route/failover)")
+    ap.add_argument("--local-steps", type=int, default=1, metavar="K",
+                    help="local-SGD cadence: K local steps per site between "
+                         "cross-site delta syncs (1 = fully synchronous)")
+    ap.add_argument("--coordinator", default=None, metavar="SITE",
+                    help="attach elastic membership (lease-based liveness, "
+                         "evict/rejoin world resize) coordinated from SITE; "
+                         "needs --route")
+    ap.add_argument("--lease-steps", type=int, default=4,
+                    help="probe failures a suspect site survives before "
+                         "eviction (with --coordinator)")
     ap.add_argument("--data", default="synthetic", choices=["synthetic", "binary"])
     ap.add_argument("--data-path", default=None)
     args = ap.parse_args()
@@ -86,9 +96,9 @@ def main():
         data_par = n // args.pods
         mesh = make_local_mesh(data=data_par, model=model_par, pod=args.pods)
 
-    route = site_groups = chaos = None
+    route = site_groups = chaos = membership = None
     if args.route:
-        from repro.core import ChaosMonitor, cosmogrid_topology
+        from repro.core import ChaosMonitor, SiteMembership, cosmogrid_topology
         src, dst = args.route.split(":")
         topo = cosmogrid_topology(backup_links=args.backup_links)
         if args.chaos_drop is not None:
@@ -97,16 +107,24 @@ def main():
                 ap.error(f"--chaos-drop needs a direct {src}-{dst} link")
             topo.connect(src, dst, direct.drop(args.chaos_drop))
             chaos = ChaosMonitor(topo, src, dst)
+        if args.coordinator:
+            membership = SiteMembership(topo, args.coordinator,
+                                        lease_steps=args.lease_steps)
         route = topo.route(src, dst)
         site_groups = topo.pod_groups()
         print(f"[train] WAN route: {route.describe()}"
               + (f"; chaos drop at step {args.chaos_drop}"
-                 if args.chaos_drop is not None else ""))
+                 if args.chaos_drop is not None else "")
+              + (f"; membership coordinated by {args.coordinator}"
+                 if args.coordinator else ""))
+    elif args.coordinator:
+        ap.error("--coordinator needs --route (a multi-site topology)")
 
     rc = RunConfig(
         model=cfg, shape=shape,
         comm=CommConfig(mode=args.mode, streams=args.streams,
-                        chunk_mb=args.chunk_mb, compress=args.compress),
+                        chunk_mb=args.chunk_mb, compress=args.compress,
+                        local_steps=args.local_steps),
         train=TrainConfig(lr=args.lr, total_steps=args.steps,
                           warmup_steps=max(args.steps // 10, 1),
                           microbatches=args.microbatches))
@@ -118,9 +136,12 @@ def main():
         trainer = Trainer(rc, mesh, ckpt_dir=args.ckpt_dir,
                           replica_dir=args.replica_dir,
                           ckpt_every=args.ckpt_every,
-                          route=route, site_groups=site_groups, chaos=chaos)
+                          route=route, site_groups=site_groups, chaos=chaos,
+                          membership=membership)
         print(f"[train] {args.arch} params={cfg.param_count():,} mesh={mesh.shape} "
-              f"mode={args.mode} zero={trainer.bundle.zero}")
+              f"mode={args.mode} zero={trainer.bundle.zero}"
+              + (f" local_steps={args.local_steps}"
+                 if args.local_steps > 1 else ""))
         print(f"[train] {trainer.init_or_restore()} at step {trainer.step}")
         hist = trainer.run(data, args.steps)
         print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}; "

@@ -186,16 +186,24 @@ def _map_with_dims(fn, tree, dims):
 # ---------------------------------------------------------------------------
 
 def build_train_step(rc: RunConfig, mesh, *, route=None,
-                     site_groups=None) -> StepBundle:
+                     site_groups=None, local_only=False) -> StepBundle:
     """`route` (a :class:`repro.core.topology.Route`) makes the cross-pod
     path multi-hop: per-hop links/knobs from the route's LinkProfiles, with
     the bottleneck leg driven by ``rc.comm`` (the autotuner's slot), and
     per-hop plans in telemetry.  `site_groups` (Topology.pod_groups) makes
     the cross-pod psum site-hierarchical: intra-site reduction first, only
-    gateway pods cross the slow hop."""
+    gateway pods cross the slow hop.  `local_only=True` builds the
+    local-SGD step (``CommConfig.local_steps > 1``): the gradient sync
+    stays inside each site (grouped pod psum over the LAN, no WAN stage,
+    no bucketed overlap — there is nothing to hide) and the cross-site
+    reconciliation is a separate K-step delta sync, see
+    ``repro/core/localsgd.py``."""
     model = build_model(rc.model)
     defs = model.param_defs()
     manual = set(dp_axes_of(mesh))
+    if local_only and rc.comm.mode != "hierarchical":
+        raise ValueError(f"local-SGD local steps need comm mode "
+                         f"'hierarchical', got {rc.comm.mode!r}")
     if site_groups is not None:
         npods = int(mesh.shape.get("pod", 1))
         total = sorted(p for g in site_groups for p in g)
@@ -248,7 +256,7 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
     #   so the optimizer can consume bucket k while k+1 is in flight.
     bucket_bytes = path.bucket_bytes
     bucketed = bool(bucket_bytes > 0 and rc.comm.mode == "hierarchical"
-                    and zero)
+                    and zero and not local_only)
     supports_flush = "flush_segments" in inspect.signature(
         model.loss).parameters
     use_flush = bool(bucketed and supports_flush
@@ -271,7 +279,7 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
             plan = stacked_flags = None
 
     replan = None
-    if rc.comm.mode != "flat":
+    if rc.comm.mode != "flat" and not local_only:
         # telemetry: the per-step traffic plan is known at build time (f32
         # grads, ZeRO leaves scattered over "data"); recording it here keeps
         # MPW.Report populated even on single-pod runs that never trace the
@@ -285,6 +293,11 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
 
     gather_layer, gather_top = _make_gather(defs, dims, zero, "data" in manual)
     dp_world = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
+    # local-SGD: the per-step gradient mean is over the *site's* replicas
+    # only (the sites' models diverge between delta syncs by design)
+    sync_world = dp_world
+    if local_only and site_groups is not None and "pod" in manual:
+        sync_world = data_size * len(site_groups[0])
     dims_or_none = dims if zero else nones
 
     def _tp_wrapped(fn, specs):
@@ -337,6 +350,17 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
         synced = _tp_wrapped(fn, rest_specs)(rest)
         return {**synced, "blocks": grads["blocks"]}
 
+    def _intra_pod(grads):
+        # local-SGD cross-pod stage: grouped psum inside each site (LAN
+        # only); the WAN exchange is the K-step delta sync
+        if "pod" not in manual:
+            return grads
+        groups = ([list(g) for g in site_groups]
+                  if site_groups is not None else None)
+        return jax.tree.map(
+            lambda g: jax.lax.psum(g, "pod", axis_index_groups=groups),
+            grads)
+
     def sync(grads):
         if rc.comm.mode == "flat":
             return flat_allreduce(grads, dp)
@@ -350,7 +374,13 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
                 grads = _map_with_dims(
                     lambda g, d: jax.lax.psum(g, "data") if d in (None, NOFSDP) else g,
                     grads, dims)
+            if local_only:
+                return _intra_pod(grads)
             return _cross_pod(grads)
+        if local_only:
+            from repro.core.collectives import local_site_allreduce
+            return local_site_allreduce(grads, path, ("data",), dims,
+                                        site_groups=site_groups)
         from repro.core.collectives import hierarchical_allreduce
         return hierarchical_allreduce(grads, path, ("data",), dims,
                                       site_groups=site_groups)
@@ -383,7 +413,7 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
         loss, metrics, grads = accum_grads(
             grad_fn, params, mbs,
             sync=sync, dims=dims_or_none, overlap=m_micro > 1)
-        grads = jax.tree.map(lambda g: g / dp_world, grads)
+        grads = jax.tree.map(lambda g: g / sync_world, grads)
         lr = lr_at(state["opt"]["step"], tc)
         # bucketed: update(bucket k) depends only on sync(bucket k) + the
         # clip-norm scalar, so the optimizer interleaves with in-flight
@@ -427,6 +457,76 @@ def build_train_step(rc: RunConfig, mesh, *, route=None,
                       state_specs=state_specs, batch_specs=batch_specs,
                       dims=dims_or_none, zero=zero, path=path, replan=replan,
                       bucket_plan=plan, compute_window=window)
+
+
+def build_delta_sync(rc: RunConfig, mesh, bundle: StepBundle, *,
+                     site_groups, member_pods, member_gateways):
+    """Jitted cross-site local-SGD reconciliation for one membership epoch.
+
+    Wraps :func:`repro.core.localsgd.delta_sync` in the same partial-manual
+    shard_map as the train step (manual DP axes, compressed wires get the
+    full-manual {"model"} inner wrap — §Perf P8).  Returns None when there
+    is nothing to reconcile (no pod axis, or fewer than two member sites);
+    the Trainer re-builds on every epoch change — membership is a
+    trace-time constant of the executable.
+    """
+    from repro.core.localsgd import delta_sync
+    manual = set(dp_axes_of(mesh))
+    if ("pod" not in manual or site_groups is None
+            or len(member_gateways) < 2):
+        return None
+    tp = int(mesh.shape.get("model", 1))
+    pspecs = bundle.state_specs["params"]
+    mspecs = jax.tree.map(lambda s: _manual_part(s, manual), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def run(p, a):
+        return delta_sync(p, a, bundle.path, dims=bundle.dims,
+                          site_groups=site_groups, member_pods=member_pods,
+                          member_gateways=member_gateways)
+
+    def body(params, anchor):
+        if rc.comm.compress == "none" or tp <= 1:
+            return run(params, anchor)
+        tp_specs = jax.tree.map(lambda s: _manual_part(s, {"model"}), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        inner = jax.shard_map(run, in_specs=(tp_specs, tp_specs),
+                              out_specs=tp_specs, axis_names={"model"},
+                              check_vma=False)
+        return inner(params, anchor)
+
+    stepped = jax.shard_map(body, mesh=mesh, in_specs=(mspecs, mspecs),
+                            out_specs=mspecs, axis_names=manual,
+                            check_vma=False)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(stepped, in_shardings=(shard(pspecs), shard(pspecs)),
+                   out_shardings=shard(pspecs), donate_argnums=(0,))
+
+
+def build_catchup(mesh, bundle: StepBundle, *, source_pod: int, target_pods):
+    """Jitted rejoin catch-up: broadcast a surviving gateway's params onto
+    the rejoined site's pods (see :func:`repro.core.localsgd.catchup`).
+    Survivor pods pass through bit-untouched."""
+    from repro.core.localsgd import catchup
+    manual = set(dp_axes_of(mesh))
+    if "pod" not in manual or not target_pods:
+        return None
+    pspecs = bundle.state_specs["params"]
+    mspecs = jax.tree.map(lambda s: _manual_part(s, manual), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def body(params):
+        return catchup(params, bundle.path, source_pod=source_pod,
+                       target_pods=target_pods)
+
+    stepped = jax.shard_map(body, mesh=mesh, in_specs=(mspecs,),
+                            out_specs=mspecs, axis_names=manual,
+                            check_vma=False)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(stepped, in_shardings=(shard(pspecs),),
+                   out_shardings=shard(pspecs), donate_argnums=(0,))
 
 
 def _batch_template(rc: RunConfig) -> dict:

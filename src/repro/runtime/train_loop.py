@@ -27,8 +27,11 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
 from repro.core.autotune import OnlineTuner, hop_shares
+from repro.core.localsgd import LocalSGDController
+from repro.core.retry import RetryPolicy, RetryState
 from repro.core.telemetry import get_telemetry
-from repro.runtime.step import StepBundle, build_train_step
+from repro.runtime.step import (StepBundle, build_catchup, build_delta_sync,
+                                build_train_step)
 
 
 @dataclass
@@ -62,7 +65,8 @@ class Trainer:
                  replica_dir: Optional[str] = None, ckpt_every: int = 50,
                  keep: int = 3, fault_hook: Optional[Callable[[int], None]] = None,
                  autotune_every: int = 0, route=None, site_groups=None,
-                 chaos=None):
+                 chaos=None, membership=None,
+                 retry: Optional[RetryPolicy] = None):
         self.rc = rc
         self.mesh = mesh
         # multi-site wiring: `route` makes the cross-pod path a multi-hop
@@ -74,8 +78,32 @@ class Trainer:
         # hook per executed step (between steps — never mid-step), from
         # which it watches the route's links and drives re-route/failover
         self.chaos = chaos
-        self.bundle: StepBundle = build_train_step(rc, mesh, route=route,
-                                                   site_groups=site_groups)
+        # elastic membership: a repro.core.membership.SiteMembership whose
+        # epoch this loop watches; a bump re-forms the local-SGD subgroup,
+        # re-tunes, and resyncs the surviving world (see
+        # _reconcile_membership).  An attached ChaosMonitor drives its
+        # liveness probes (and escalates detected faults to suspicion);
+        # without one the loop ticks the probes itself.
+        self.membership = membership
+        if (chaos is not None and membership is not None
+                and getattr(chaos, "membership", None) is None):
+            chaos.membership = membership
+        # fault-recovery budget: bounded checkpoint-restore attempts per
+        # incident streak (a successful step resets the schedule)
+        self.retry = retry or RetryPolicy(max_attempts=8)
+        # local-SGD cadence (CommConfig.local_steps): K > 1 builds the
+        # site-local step and ships a model delta every K-th step; K = 1
+        # *is* the synchronous path (bit-identical by construction)
+        self.localsgd = LocalSGDController(rc.comm.local_steps)
+        self.bundle: StepBundle = build_train_step(
+            rc, mesh, route=route, site_groups=site_groups,
+            local_only=self.localsgd.enabled)
+        self._dsync = None           # jitted delta sync for this epoch
+        self._dsync_built = False
+        self._anchor = None          # params snapshot at the last delta sync
+        self._epoch_seen = membership.epoch if membership is not None else 0
+        self._members_seen = (set(membership.members())
+                              if membership is not None else set())
         self.ckpt_every = ckpt_every
         self.fault_hook = fault_hook
         self.detector = StragglerDetector()
@@ -170,6 +198,13 @@ class Trainer:
             raise RuntimeError("Trainer.state is unset — call "
                                "init_or_restore() before run()")
         target = self.step + num_steps
+        # bounded recovery: restores are paced by the RetryPolicy schedule
+        # (modeled backoff; a successful step resets the incident streak)
+        retry = RetryState(self.retry)
+        if self.localsgd.enabled and self._anchor is None:
+            # the first K local steps diverge from *this* snapshot
+            self._anchor = jax.tree.map(lambda x: x.copy(),
+                                        self.state["params"])
         while self.step < target:
             batch = self._place_batch(next(data_iter))
             t0 = time.perf_counter()
@@ -179,10 +214,18 @@ class Trainer:
                 self.state, metrics = self.bundle.fn(self.state, batch)
                 jax.block_until_ready(metrics["loss"])
             except _RECOVERABLE as e:  # noqa: PERF203
+                delay = retry.next_delay_s()
+                if delay is None:
+                    log(f"[fault] step {self.step}: {type(e).__name__}: {e}; "
+                        f"recovery budget exhausted "
+                        f"({self.retry.max_attempts} attempts)")
+                    raise
                 log(f"[fault] step {self.step}: {type(e).__name__}: {e}; "
-                    f"restoring latest checkpoint")
+                    f"restoring latest checkpoint "
+                    f"(backoff {delay*1e3:.0f}ms modeled)")
                 self._recover()
                 continue
+            retry.reset()
             dt = time.perf_counter() - t0
             if self._fresh_compile:
                 # first step on a newly built executable: dt is dominated by
@@ -207,6 +250,13 @@ class Trainer:
                 # route swap or failover here is mid-step-safe by
                 # construction: the next step launches on the new bundle
                 self.chaos.on_step(self, log=log)
+            elif self.membership is not None:
+                # no monitor attached: the loop ticks the liveness probes
+                self.membership.on_step(self.step)
+            if self.membership is not None:
+                self._reconcile_membership(log)
+            if self.localsgd.enabled and self.localsgd.is_sync_step(self.step):
+                self._delta_sync(log)
             rec = {"step": self.step,
                    "loss": float(metrics["loss"]),
                    "grad_norm": float(metrics["grad_norm"]),
@@ -242,6 +292,98 @@ class Trainer:
         for i in range(path.n_hops):
             tel.record(path.hop_key(i), dt * shares[i], step=self.step)
 
+    # -- local-SGD / elastic membership --------------------------------------
+    def _member_groups(self) -> Optional[list]:
+        """Pod groups of the current epoch's live sites (all sites when no
+        membership is attached)."""
+        if self.site_groups is None:
+            return None
+        if self.membership is not None:
+            return [list(g) for g in self.membership.member_pod_groups()]
+        return [list(g) for g in self.site_groups]
+
+    def _delta_sync(self, log: Callable[[str], None] = print,
+                    full: bool = False) -> None:
+        """Run one cross-site reconciliation (every K-th step).
+
+        `full=True` averages the raw params (delta against a zero anchor)
+        — the world-resize resync, which also re-establishes the invariant
+        the incremental sync needs: every member pod holds the same anchor.
+        """
+        if not self._dsync_built:
+            self._dsync_built = True
+            groups = self._member_groups()
+            if groups is not None and len(groups) >= 2:
+                member_pods = [p for g in groups for p in g]
+                self._dsync = build_delta_sync(
+                    self.rc, self.mesh, self.bundle,
+                    site_groups=self.site_groups,
+                    member_pods=member_pods,
+                    member_gateways=[g[0] for g in groups])
+                if self._dsync is not None:
+                    self._fresh_compile = True
+        if self._dsync is None:
+            return
+        params = self.state["params"]
+        anchor = (jax.tree.map(lambda x: (x * 0).astype(x.dtype), params)
+                  if full else self._anchor)
+        if anchor is None:
+            return
+        new_p = self._dsync(params, anchor)
+        self.state["params"] = new_p
+        self._anchor = jax.tree.map(lambda x: x.copy(), new_p)
+
+    def _reconcile_membership(self, log: Callable[[str], None] = print) -> None:
+        """React to a membership epoch bump: re-form the delta-sync
+        subgroup, catch rejoined sites up from a survivor, re-tune for the
+        resized world, and resync the members (evict → resize → retune →
+        recover in the incident timeline)."""
+        mem = self.membership
+        if mem is None or mem.epoch == self._epoch_seen:
+            return
+        prev, self._epoch_seen = self._epoch_seen, mem.epoch
+        members = mem.members()
+        log(f"[elastic] step {self.step}: membership epoch {prev} -> "
+            f"{mem.epoch}; members {members}")
+        mem.log.add(self.step, "resize", ",".join(members),
+                    {"epoch": mem.epoch, "from_epoch": prev,
+                     "members": members})
+        # rejoined sites first: clone a survivor gateway's params onto
+        # their pods (the emulated form of the replica catch-up restore)
+        joined = [s for s in members if s not in self._members_seen]
+        survivors = [s for s in members if s in self._members_seen]
+        if (joined and survivors and self.site_groups is not None
+                and "pod" in self.mesh.axis_names):
+            topo = mem.topo
+            names = [s.name for s in topo.sites]
+            pg = [list(g) for g in topo.pod_groups()]
+            targets = [p for n, g in zip(names, pg) if n in joined for p in g]
+            cu = build_catchup(self.mesh, self.bundle,
+                               source_pod=topo.site(survivors[0]).gateway,
+                               target_pods=targets)
+            if cu is not None:
+                self.state["params"] = cu(self.state["params"])
+                self._fresh_compile = True
+                mem.log.add(self.step, "catchup", ",".join(joined),
+                            {"source": survivors[0], "pods": targets})
+        self._members_seen = set(members)
+        # the old subgroup's executable and cost landscape are gone
+        self._dsync = None
+        self._dsync_built = False
+        if self.tuner is not None:
+            self.tuner.abort_probe()
+            self.tuner.converged = False
+            self.tuner.best_cost = None
+        mem.log.add(self.step, "retune", self.bundle.path.key,
+                    {"epoch": mem.epoch})
+        if self.localsgd.enabled:
+            # full resync: every member pod leaves with identical params
+            # *and* an identical anchor — without this, per-site anchors
+            # would diverge and the incremental merge would never converge
+            self._delta_sync(log, full=True)
+        mem.log.add(self.step, "recover", ",".join(members),
+                    {"epoch": mem.epoch})
+
     # -- online autotuning ----------------------------------------------------
     @staticmethod
     def _cfg_key(cfg: dict) -> tuple:
@@ -261,9 +403,13 @@ class Trainer:
         if key not in self._bundles:
             self._bundles[key] = build_train_step(
                 self.rc, self.mesh, route=self.route,
-                site_groups=self.site_groups)
+                site_groups=self.site_groups,
+                local_only=self.localsgd.enabled)
             self._fresh_compile = True   # next step pays XLA compilation
         self.bundle = self._bundles[key]
+        # the delta sync inherits the path knobs: rebuild on next sync step
+        self._dsync = None
+        self._dsync_built = False
         if self.bundle.replan is not None:
             # cache hit: building already noted the plan; a swap back to a
             # cached config must re-note it or PathStats would keep
@@ -285,8 +431,11 @@ class Trainer:
         self.route = new_route
         self._bundles.clear()        # keyed by knobs, not route: invalidate
         self.bundle = build_train_step(self.rc, self.mesh, route=new_route,
-                                       site_groups=self.site_groups)
+                                       site_groups=self.site_groups,
+                                       local_only=self.localsgd.enabled)
         self._fresh_compile = True
+        self._dsync = None
+        self._dsync_built = False
         if self.tuner is not None:
             # the old route's cost landscape is gone: revert any in-flight
             # probe and restart the climb from the incumbent on fresh moves
@@ -305,8 +454,11 @@ class Trainer:
         self.route = None
         self._bundles.clear()
         self.bundle = build_train_step(self.rc, self.mesh, route=None,
-                                       site_groups=self.site_groups)
+                                       site_groups=self.site_groups,
+                                       local_only=self.localsgd.enabled)
         self._fresh_compile = True
+        self._dsync = None
+        self._dsync_built = False
         outcome = "degraded"
         if self.manager and self.manager.has_checkpoint():
             self._recover()

@@ -180,6 +180,30 @@ def test_detector_anomaly_streak_must_be_consecutive():
     assert det.observe("k", 20.0)
 
 
+def test_detector_rearms_after_heal_and_fires_on_second_fault():
+    """Two sequential faults on one path: the latch must not go blind.
+
+    Fault 1 fires and latches; `rearm_after` consecutive healthy samples
+    un-latch the key; fault 2 — a later, distinct incident — fires again.
+    An anomalous sample mid-heal resets the healthy streak, so a link
+    that is still broken never re-arms."""
+    det = ChaosDetector(collapse=8.0, window=2, min_baseline=2,
+                        rearm_after=3)
+    det.observe("hop", 1.0)
+    det.observe("hop", 1.1)
+    assert not det.observe("hop", 50.0)
+    assert det.observe("hop", 50.0)        # fault 1 fires
+    assert not det.observe("hop", 50.0)    # latched: same incident
+    assert not det.observe("hop", 1.0)     # healing: streak 1
+    assert not det.observe("hop", 1.0)     # streak 2
+    assert not det.observe("hop", 50.0)    # relapse: streak back to 0
+    assert not det.observe("hop", 1.0)
+    assert not det.observe("hop", 1.0)
+    assert not det.observe("hop", 1.0)     # 3rd consecutive: re-armed
+    assert not det.observe("hop", 50.0)    # fault 2, 1st anomaly
+    assert det.observe("hop", 50.0)        # fault 2 fires — not blind
+
+
 # ---------------------------------------------------------------------------
 # incident log
 # ---------------------------------------------------------------------------

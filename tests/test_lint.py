@@ -280,6 +280,90 @@ def test_r5_silent_on_seeded_rng_and_outside_core():
     assert run_rule("R5", clock, relpath="src/repro/runtime/x.py") == []
 
 
+# -- R6: retry loops route through RetryPolicy --------------------------------
+
+R6_BAD = """
+    import time
+
+    def fetch(sock):
+        while True:
+            try:
+                return sock.recv()
+            except OSError:
+                time.sleep(0.5)
+                continue
+"""
+
+R6_GOOD = """
+    from repro.core.retry import RetryPolicy, RetryState
+
+    def fetch(sock):
+        retry = RetryState(RetryPolicy(max_attempts=3))
+        while True:
+            try:
+                return sock.recv()
+            except OSError:
+                if retry.next_delay_s() is None:
+                    raise
+                continue
+"""
+
+
+def test_r6_fires_on_continue_from_except_in_while():
+    found = run_rule("R6", R6_BAD)
+    assert any(f.rule == "R6" and "except" in f.message for f in found)
+
+
+def test_r6_fires_on_sleep_backoff_in_retry_loop():
+    found = run_rule("R6", R6_BAD)
+    assert any("time.sleep" in f.message for f in found)
+
+
+def test_r6_silent_when_routed_through_retrypolicy():
+    assert run_rule("R6", R6_GOOD) == []
+
+
+def test_r6_silent_outside_src_and_on_plain_loops():
+    # same hand-rolled loop outside src/ (tests, tools) is not our business
+    assert run_rule("R6", R6_BAD, relpath="tools/x.py") == []
+    # a while loop whose continue is plain control flow, not error-swallowing
+    plain = """
+        def drain(q):
+            while q:
+                item = q.pop()
+                if item is None:
+                    continue
+                handle(item)
+    """
+    assert run_rule("R6", plain) == []
+    # a sleep in a poll loop with no try/except is pacing, not retry
+    poll = """
+        import time
+
+        def wait_for(flag):
+            while not flag():
+                time.sleep(0.1)
+    """
+    assert run_rule("R6", poll) == []
+
+
+def test_r6_continue_in_nested_for_does_not_blame_the_while():
+    # the `continue` targets the inner for-loop, which has no try around it
+    src = """
+        def pump(jobs):
+            while jobs:
+                try:
+                    jobs = refresh(jobs)
+                except KeyError:
+                    jobs = []
+                for j in jobs:
+                    if j.done:
+                        continue
+                    run(j)
+    """
+    assert run_rule("R6", src) == []
+
+
 # -- suppressions and baseline ------------------------------------------------
 
 def test_inline_suppression_silences_one_rule():

@@ -134,3 +134,93 @@ def test_quant_int8_rejects_ragged_trailing_dim(extra):
     x = jnp.zeros((2, 256 + extra), jnp.float32)
     with pytest.raises(ValueError, match="trailing dim"):
         ops.quant_int8(x, block=256)
+
+
+# ---------------------------------------------------------------------------
+# elastic membership (epochs, quorum) and local-SGD delta sync
+# ---------------------------------------------------------------------------
+
+from repro.core import cosmogrid_topology  # noqa: E402
+from repro.core.chaos import IncidentLog  # noqa: E402
+from repro.core.localsgd import (LocalSGDController,  # noqa: E402
+                                 reference_delta_merge)
+from repro.core.membership import QuorumPolicy, SiteMembership  # noqa: E402
+
+
+def _fresh_membership(**kw):
+    t = cosmogrid_topology(backup_links=True)
+    return SiteMembership(t, "amsterdam", log=IncidentLog(), **kw)
+
+
+@given(seed=st.integers(0, 40))
+def test_membership_epoch_strictly_monotonic(seed):
+    """Arbitrary seeded join/leave/evict sequences: the epoch never moves
+    backwards, and every *applied* transition bumps it by exactly one."""
+    rng = np.random.default_rng(seed)
+    mem = _fresh_membership(lease_steps=2)
+    others = [s.name for s in mem.topo.sites if s.name != "amsterdam"]
+    last = mem.epoch
+    for step in range(30):
+        site = others[int(rng.integers(len(others)))]
+        op = int(rng.integers(3))
+        if op == 0:
+            applied = mem.evict(site, step)
+        elif op == 1:
+            applied = mem.join(site, step)
+        else:
+            applied = mem.leave(site, step)
+        assert mem.epoch == last + (1 if applied else 0)
+        assert mem.epoch >= last
+        last = mem.epoch
+
+
+@given(seed=st.integers(0, 40))
+def test_quorum_never_satisfied_by_evicted_sites(seed):
+    """Evicted sites raise the quorum bar (total) but never clear it
+    (live): has_quorum() tracks live members only, under any evict order."""
+    rng = np.random.default_rng(seed)
+    mem = _fresh_membership(quorum=QuorumPolicy(min_sites=1, fraction=0.75))
+    others = [s.name for s in mem.topo.sites if s.name != "amsterdam"]
+    total = len(mem.members())
+    assert mem.has_quorum()
+    for step, site in enumerate(rng.permutation(others)):
+        mem.evict(str(site), step)
+        live = len(mem.members())
+        assert str(site) not in mem.members()
+        assert mem.has_quorum() == mem.quorum.satisfied(live, total)
+    # 1 live of 4 at fraction 0.75: the three evicted sites cannot help
+    assert not mem.has_quorum()
+
+
+@given(k=st.integers(1, 16), steps=st.sampled_from([1, 7, 32, 200]))
+def test_localsgd_k1_is_the_synchronous_path(k, steps):
+    """K=1 *is* the synchronous pipeline: the controller is disabled (the
+    Trainer never builds a delta sync — bit-identity by construction) and
+    every step is a sync step; K>1 syncs after every K-th local step."""
+    c = LocalSGDController(k)
+    syncs = [s for s in range(steps) if c.is_sync_step(s)]
+    if k == 1:
+        assert not c.enabled and syncs == list(range(steps))
+    else:
+        assert c.enabled and syncs == list(range(k - 1, steps, k))
+        assert len(syncs) == steps // k
+
+
+@given(seed=st.integers(0, 30), nsites=st.sampled_from([2, 3, 4, 5]))
+def test_delta_merge_zero_anchor_is_the_plain_average(seed, nsites):
+    """With a zero anchor (what the trainer uses for a full resync) the
+    delta merge IS the member-param average, bit-for-bit — and with the
+    membership stable this is exactly what a synchronous param average
+    computes, so K=1-equivalence holds at the merge level too."""
+    rng = np.random.default_rng(seed)
+    anchor = np.zeros(33, np.float32)
+    params = {f"s{i}": rng.standard_normal(33).astype(np.float32)
+              for i in range(nsites)}
+    members = [f"s{i}" for i in range(nsites - 1)]  # last site not a member
+    merged = reference_delta_merge(anchor, params, members)
+    sync = np.mean([params[m] for m in members], axis=0)
+    for m in members:
+        assert merged[m].tobytes() == sync.astype(np.float32).tobytes()
+    # non-members pass through bit-untouched
+    out = merged[f"s{nsites - 1}"]
+    assert out.tobytes() == params[f"s{nsites - 1}"].tobytes()

@@ -18,6 +18,12 @@ rule ids and what they guard:
   R5  core-determinism   no wall-clock reads or unseeded RNG in core/
                          (run-twice determinism is what the chaos and
                          property suites replay against).
+  R6  retry-policy       retry loops in src/ must route through
+                         RetryPolicy: no literal while-retry that swallows
+                         exceptions with a bare `continue` or open-codes
+                         backoff with `time.sleep` — hand-rolled loops skip
+                         the seeded jitter/deadline budget and break the
+                         replayable incident timelines.
 """
 from __future__ import annotations
 
@@ -294,8 +300,10 @@ def rule_r3(ctx: ModuleContext) -> list[Finding]:
 #   {key}/hop{i}:{leg}   per-hop legs
 #   {key}/bkt{i}         per-bucket plans
 #   {key}/intra {key}/wan  hierarchical split
+#   {key}/delta          local-SGD cross-site delta syncs
 #   ckpt...              checkpoint paths (constant prefix)
-_KEY_TEMPLATES = {"{}", "{}/hop{}:{}", "{}/bkt{}", "{}/intra", "{}/wan"}
+_KEY_TEMPLATES = {"{}", "{}/hop{}:{}", "{}/bkt{}", "{}/intra", "{}/wan",
+                  "{}/delta"}
 _TEL_CALLS = {"note_plan", "record", "timed", "note_checksum_error", "path"}
 _TEL_KWARGS = {"tel_key", "tel_prefix"}
 
@@ -344,8 +352,8 @@ def rule_r4(ctx: ModuleContext) -> list[Finding]:
                 f"telemetry key literal {tpl!r} does not match the key "
                 f"grammar",
                 "keys must be `{key}`, `{key}/hop{i}:{leg}`, `{key}/bkt{i}`, "
-                "`{key}/intra`, `{key}/wan`, or a `ckpt*` constant — see "
-                "docs/lint.md#r4"))
+                "`{key}/intra`, `{key}/wan`, `{key}/delta`, or a `ckpt*` "
+                "constant — see docs/lint.md#r4"))
     return out
 
 
@@ -391,12 +399,85 @@ def rule_r5(ctx: ModuleContext) -> list[Finding]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# R6: retry loops must route through RetryPolicy
+# ---------------------------------------------------------------------------
+
+_RETRY_NAMES = {"RetryPolicy", "RetryState", "retry", "retry_policy", "policy"}
+_RETRY_ATTRS = {"RetryPolicy", "RetryState", "retry", "retry_policy",
+                "_retry", "retry_state"}
+
+
+def _references_retry(fn: ast.AST) -> bool:
+    """The function consults RetryPolicy/RetryState (or a retry-named
+    binding of one) somewhere — its loop delegates attempt budgeting."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id in _RETRY_NAMES:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in _RETRY_ATTRS:
+            return True
+    return False
+
+
+def _owner_loop(ctx: ModuleContext, node: ast.AST) -> Optional[ast.AST]:
+    """Nearest enclosing loop — the one a `continue` would re-enter."""
+    for parent in ctx.parent_chain(node):
+        if isinstance(parent, (ast.While, ast.For, ast.AsyncFor)):
+            return parent
+        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return None
+    return None
+
+
+def rule_r6(ctx: ModuleContext) -> list[Finding]:
+    if not ctx.relpath.startswith("src/"):
+        return []
+    out: list[Finding] = []
+    for loop in ast.walk(ctx.tree):
+        if not isinstance(loop, ast.While):
+            continue
+        fn = next((p for p in ctx.parent_chain(loop)
+                   if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))),
+                  None)
+        if fn is not None and _references_retry(fn):
+            continue                         # budgeted by RetryPolicy: fine
+        has_try = any(isinstance(n, ast.Try) for n in ast.walk(loop))
+        for node in ast.walk(loop):
+            if isinstance(node, ast.Continue) and _owner_loop(ctx, node) is loop:
+                in_handler = False
+                for p in ctx.parent_chain(node):
+                    if p is loop:
+                        break
+                    if isinstance(p, ast.ExceptHandler):
+                        in_handler = True
+                        break
+                if in_handler:
+                    out.append(Finding(
+                        "R6", ctx.relpath, node.lineno,
+                        "hand-rolled retry: `continue` from an `except` "
+                        "handler inside a `while` loop",
+                        "route the attempt budget through "
+                        "core.retry.RetryPolicy (seeded backoff + jitter + "
+                        "deadline) instead of looping until it works"))
+            elif (isinstance(node, ast.Call) and has_try
+                    and dotted(node.func) == "time.sleep"
+                    and _owner_loop(ctx, node) is loop):
+                out.append(Finding(
+                    "R6", ctx.relpath, node.lineno,
+                    "hand-rolled backoff: `time.sleep(...)` in a retrying "
+                    "`while` loop",
+                    "take delays from RetryPolicy.schedule() so backoff is "
+                    "seeded, jittered, and deadline-bounded"))
+    return out
+
+
 RULES: dict[str, Callable[[ModuleContext], list[Finding]]] = {
     "R1": rule_r1,
     "R2": rule_r2,
     "R3": rule_r3,
     "R4": rule_r4,
     "R5": rule_r5,
+    "R6": rule_r6,
 }
 
 
