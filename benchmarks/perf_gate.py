@@ -6,7 +6,8 @@ Usage::
 
 Walks each section's ``RESULTS`` export in both files and compares every
 numeric value whose key names a higher-is-better performance figure
-(``*GBps*``, ``*throughput*``, ``*speedup*``, ``*efficiency*``).  Exits 1
+(``*GBps*``, ``*throughput*``, ``*speedup*``, ``*efficiency*``,
+``*goodput*``).  Exits 1
 if any figure regressed more than ``threshold`` (default 10%) against the
 committed baseline.  Keys or sections present in only one file are skipped
 — new benchmarks never fail the gate, and a section that *errored* in the
@@ -23,7 +24,8 @@ import json
 import re
 import sys
 
-HIGHER_IS_BETTER = re.compile(r"gbps|throughput|speedup|efficiency", re.I)
+HIGHER_IS_BETTER = re.compile(r"gbps|throughput|speedup|efficiency|goodput",
+                              re.I)
 
 
 def _walk(node, path=()):

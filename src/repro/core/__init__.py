@@ -49,6 +49,13 @@ from repro.core.filetransfer import (  # noqa: F401
     local_transfer,
     plan_file_chunks,
 )
+from repro.core.kvship import (  # noqa: F401
+    KVShipPlan,
+    KVShipResult,
+    kv_cache_bytes,
+    plan_kv_ship,
+    ship_kv,
+)
 from repro.core.localsgd import LocalSGDController  # noqa: F401
 from repro.core.membership import QuorumPolicy, SiteMembership  # noqa: F401
 from repro.core.overlap import accum_grads  # noqa: F401
@@ -61,6 +68,12 @@ from repro.core.path import (  # noqa: F401
     local_path,
 )
 from repro.core.retry import PROBE_RETRY, RetryPolicy, RetryState  # noqa: F401
+from repro.core.serving import (  # noqa: F401
+    ContinuousBatcher,
+    FixedBatchScheduler,
+    Request,
+    modeled_ship_steps,
+)
 from repro.core.ring import (  # noqa: F401
     ring_all_gather,
     ring_allreduce,

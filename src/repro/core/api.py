@@ -40,6 +40,7 @@ class _PathState:
     path: WidePath
     tuner: Optional[OnlineTuner] = None        # single-link paths
     route_tuner: Optional[RouteTuner] = None   # multi-hop paths (per hop)
+    batcher: Optional[object] = None           # ContinuousBatcher, via Serve()
 
 
 # process-wide path ids: telemetry keys ("mpw{pid}:{link}") must stay unique
@@ -183,6 +184,63 @@ class MPW:
         from repro.core.membership import SiteMembership
         self.membership = SiteMembership(topo, coordinator, **kw)
         return self.membership
+
+    # -- serving (beyond the C API; the paper's client-server claim) ---------
+    def Serve(self, pid: int, *, max_slots: int, queue_limit: int = 64,
+              prefill_steps=1, step_s: float = 1e-2, kv_bytes=0,
+              ship_steps=None):
+        """Attach a continuous-batching serving scheduler to a path.
+
+        The path is the WAN leg prefilled KV caches cross in a
+        disaggregated deployment: `kv_bytes` (an int, or a callable of the
+        :class:`~repro.core.serving.Request` — e.g. proportional to
+        prompt_len via :func:`~repro.core.kvship.kv_cache_bytes`) converts
+        into per-request ship steps through the path's deterministic link
+        model; `ship_steps` (int or callable) overrides the model outright.
+        Returns the :class:`~repro.core.serving.ContinuousBatcher`;
+        calling again replaces it.  The runtime engine
+        (`repro.runtime.serving.ServingEngine`) drives the same scheduler
+        with real prefill/ship/decode work."""
+        from repro.core.serving import ContinuousBatcher, modeled_ship_steps
+        st = self.paths[pid]
+        path = st.path
+        if ship_steps is not None:
+            ship = ship_steps
+        elif callable(kv_bytes):
+            ship = lambda r: modeled_ship_steps(int(kv_bytes(r)), path, step_s)
+        elif kv_bytes:
+            ship = modeled_ship_steps(int(kv_bytes), path, step_s)
+        else:
+            ship = 0
+        st.batcher = ContinuousBatcher(
+            max_slots, queue_limit, prefill_steps=prefill_steps,
+            ship_steps=ship, step_s=step_s, name=path.key)
+        return st.batcher
+
+    def Admit(self, pid: int, prompt_len: int, max_new: int) -> Optional[int]:
+        """Admission control: submit one request to the path's serving
+        scheduler.  Returns the request id, or None when the queue is full
+        (the request is rejected, not parked)."""
+        st = self.paths[pid]
+        if st.batcher is None:
+            raise ValueError(f"path {pid} has no serving scheduler — call "
+                             f"Serve(pid={pid}, ...) first")
+        return st.batcher.submit(prompt_len, max_new)
+
+    def ServeStats(self, pid: int, drain: bool = True) -> dict:
+        """Serving stats for a path's scheduler: completion/rejection
+        counts, latency and TTFT percentiles, goodput (modeled seconds),
+        plus the deterministic event `timeline`.  `drain=True` first steps
+        the virtual clock until every admitted request is terminal."""
+        st = self.paths[pid]
+        if st.batcher is None:
+            raise ValueError(f"path {pid} has no serving scheduler — call "
+                             f"Serve(pid={pid}, ...) first")
+        if drain:
+            st.batcher.drain()
+        out = st.batcher.stats()
+        out["timeline"] = st.batcher.timeline()
+        return out
 
     def setAutoTuning(self, pid: int, enabled: bool,
                       payload_bytes: Optional[int] = None, *,

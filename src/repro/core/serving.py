@@ -1,0 +1,385 @@
+"""Continuous-batching serving scheduler over WidePaths (deterministic).
+
+The paper's third claim is "very fast connections in client-server
+environments"; this module is the client-server tier's brain.  A
+:class:`ContinuousBatcher` owns a fixed set of *decode slots* and fills free
+slots from an admission-controlled request queue every step — instead of
+running fixed batches to completion — while each admitted request walks the
+disaggregated pipeline::
+
+    queued -> prefill (site A) -> ship (KV over the WidePath) -> decode
+           (site B) -> done
+
+All time is a virtual step clock (one decode token per step per slot); WAN
+legs take :func:`modeled_ship_steps` derived from the deterministic
+alpha-beta link model (`repro.core.autotune.simulate_transfer_s`) — no wall
+clock anywhere, so a given arrival trace replays bit-identically (the golden
+schedule test in tests/test_serving.py pins one).  The runtime engine
+(`repro.runtime.serving.ServingEngine`) drives the same bookkeeping with
+*real* prefill/ship/decode work instead of modeled durations.
+
+Thread-safety: `submit` may be called from a frontend thread while a driver
+thread steps the clock, so every state transition runs under the instance
+lock (mpwlint R2).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+from typing import Callable, Optional, Union
+
+import numpy as np
+
+from repro.core.autotune import simulate_transfer_s
+from repro.core.path import WidePath
+
+# request lifecycle states
+QUEUED = "queued"        # admitted, waiting for a free decode slot
+PREFILL = "prefill"      # slot claimed; waiting for / running site-A prefill
+SHIP = "ship"            # KV cache in flight over the WidePath
+DECODE = "decode"        # occupying a decode slot on site B
+DONE = "done"
+REJECTED = "rejected"
+
+_TERMINAL = (DONE, REJECTED)
+
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request (arrival is a virtual step index)."""
+    rid: int
+    arrival: int
+    prompt_len: int
+    max_new: int
+
+
+@dataclass
+class _Track:
+    """Mutable per-request bookkeeping (timestamps are virtual steps)."""
+    req: Request
+    state: str = QUEUED
+    slot: Optional[int] = None
+    tokens: int = 0                  # generated so far (first from prefill)
+    t_prefill: Optional[int] = None  # prefill started
+    t_ship: Optional[int] = None     # prefill done / ship started
+    t_ship_end: Optional[int] = None
+    t_decode: Optional[int] = None   # decode started == first token
+    t_done: Optional[int] = None
+
+
+def modeled_ship_steps(kv_bytes: int, path: WidePath, step_s: float) -> int:
+    """Virtual steps one request's KV cache spends on the wire.
+
+    Sums the deterministic per-hop transfer model over the path's route
+    (store-and-forward, like `Forward`), then quantizes to the decode step
+    clock.  0 bytes ship for free (the monolithic baseline)."""
+    if kv_bytes <= 0:
+        return 0
+    if step_s <= 0:
+        raise ValueError(f"step_s must be > 0 to quantize ship time, "
+                         f"got {step_s}")
+    total = 0.0
+    for hop in path.route:
+        total += simulate_transfer_s(
+            kv_bytes, hop.link, streams=hop.streams,
+            chunk_bytes=hop.chunk_bytes, pacing=hop.comm.pacing)
+    return max(1, int(math.ceil(total / step_s)))
+
+
+def _percentile(xs: list, q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching with admission control.
+
+    Parameters
+    ----------
+    max_slots: decode slots (the fixed decode batch width).
+    queue_limit: queued requests beyond which `submit` rejects.
+    prefill_steps: virtual steps one prefill takes — an int, or a callable
+        of the :class:`Request` (e.g. proportional to prompt_len).  Prefill
+        is a single site-A server: one request prefills at a time, but the
+        decode slots keep ticking underneath — the disaggregation win.
+    ship_steps: virtual steps the KV ship takes (int or callable); use
+        :func:`modeled_ship_steps` to derive it from a real WidePath.
+    step_s: modeled wall seconds of one decode step (converts the virtual
+        clock into latency/goodput figures; never read from a real clock).
+    """
+
+    def __init__(self, max_slots: int, queue_limit: int = 64, *,
+                 prefill_steps: Union[int, Callable[[Request], int]] = 1,
+                 ship_steps: Union[int, Callable[[Request], int]] = 0,
+                 step_s: float = 1e-2, name: str = "serve"):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        if queue_limit < 0:
+            raise ValueError(f"queue_limit must be >= 0, got {queue_limit}")
+        self.max_slots = int(max_slots)
+        self.queue_limit = int(queue_limit)
+        self.step_s = float(step_s)
+        self.name = name
+        self._prefill_steps = prefill_steps
+        self._ship_steps = ship_steps
+        self._lock = threading.Lock()
+        self._step = 0                      # current virtual step
+        self._next_rid = 0
+        self._reqs: dict[int, _Track] = {}
+        self._queue: list[int] = []         # FIFO of QUEUED rids
+        self._slots: list[Optional[int]] = [None] * self.max_slots
+        self._prefill_fifo: list[int] = []  # slotted rids awaiting prefill
+        self._prefill_rid: Optional[int] = None   # rid on the prefill server
+        self._prefill_end = 0
+        self._events: list[list] = []       # [kind, "req{rid}", step]
+
+    # -- helpers (call with self._lock held) --------------------------------
+    def _emit(self, kind: str, rid: int, step: int) -> None:
+        self._events.append([kind, f"req{rid}", step])
+
+    def _n_steps(self, which, req: Request) -> int:
+        n = which(req) if callable(which) else int(which)
+        if n < 0:
+            raise ValueError(f"modeled duration must be >= 0, got {n} "
+                             f"for req{req.rid}")
+        return n
+
+    def _start_decode(self, tr: _Track, step: int) -> None:
+        tr.state = DECODE
+        tr.t_decode = step
+        tr.tokens = 1          # first token rides on the prefill logits
+        self._emit("decode", tr.req.rid, step)
+        if tr.tokens >= tr.req.max_new:
+            self._finish(tr, step)
+
+    def _start_ship(self, tr: _Track, step: int) -> None:
+        tr.state = SHIP
+        tr.t_ship = step
+        self._emit("ship", tr.req.rid, step)
+        ss = self._n_steps(self._ship_steps, tr.req)
+        if ss == 0:
+            self._start_decode(tr, step)
+        else:
+            tr.t_ship_end = step + ss
+
+    def _finish(self, tr: _Track, step: int) -> None:
+        tr.state = DONE
+        tr.t_done = step
+        if tr.slot is not None:
+            self._slots[tr.slot] = None
+            tr.slot = None
+        self._emit("complete", tr.req.rid, step)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt_len: int, max_new: int,
+               step: Optional[int] = None) -> Optional[int]:
+        """Admission control: enqueue a request, or reject it when the queue
+        is full.  Returns the rid, or None when rejected."""
+        if prompt_len < 1 or max_new < 1:
+            raise ValueError(f"prompt_len and max_new must be >= 1, got "
+                             f"prompt_len={prompt_len} max_new={max_new}")
+        with self._lock:
+            at = self._step if step is None else int(step)
+            rid = self._next_rid
+            self._next_rid = rid + 1
+            req = Request(rid, at, int(prompt_len), int(max_new))
+            tr = _Track(req)
+            self._reqs[rid] = tr
+            if len(self._queue) >= self.queue_limit:
+                tr.state = REJECTED
+                tr.t_done = at
+                self._emit("reject", rid, at)
+                return None
+            self._queue.append(rid)
+            self._emit("admit", rid, at)
+            return rid
+
+    def step_once(self) -> int:
+        """Advance the virtual clock one step.  Transition order within a
+        step: prefill completions -> ship completions -> decode token tick
+        (completions free slots) -> slot fill from the queue -> prefill
+        start.  Returns the step just processed."""
+        with self._lock:
+            step = self._step
+            # (1) prefill completion -> ship starts (frees the prefill server)
+            if self._prefill_rid is not None and self._prefill_end == step:
+                tr = self._reqs[self._prefill_rid]
+                self._prefill_rid = None
+                self._start_ship(tr, step)
+            # (2) ship completions -> decode starts (first token lands)
+            for rid in sorted(self._reqs):
+                tr = self._reqs[rid]
+                if tr.state == SHIP and tr.t_ship_end == step:
+                    self._start_decode(tr, step)
+            # (3) decode tick: one token per occupied slot (not the slot
+            # whose first token arrived this very step)
+            for slot, rid in enumerate(self._slots):
+                if rid is None:
+                    continue
+                tr = self._reqs[rid]
+                if tr.state != DECODE or tr.t_decode == step:
+                    continue
+                tr.tokens += 1
+                if tr.tokens >= tr.req.max_new:
+                    self._finish(tr, step)
+            # (4) fill free decode slots from the queue, FIFO
+            for slot in range(self.max_slots):
+                if self._slots[slot] is not None or not self._queue:
+                    continue
+                rid = self._queue.pop(0)
+                tr = self._reqs[rid]
+                tr.slot = slot
+                tr.state = PREFILL
+                self._slots[slot] = rid
+                self._prefill_fifo.append(rid)
+            # (5) single prefill server picks up the next slotted request
+            if self._prefill_rid is None and self._prefill_fifo:
+                rid = self._prefill_fifo.pop(0)
+                tr = self._reqs[rid]
+                self._prefill_rid = rid
+                ps = max(1, self._n_steps(self._prefill_steps, tr.req))
+                self._prefill_end = step + ps
+                tr.t_prefill = step
+                self._emit("prefill", rid, step)
+            self._step = step + 1
+            return step
+
+    def slot_of(self, rid: int) -> Optional[int]:
+        """Decode slot a request occupies (None while queued/terminal)."""
+        with self._lock:
+            return self._reqs[rid].slot
+
+    def now(self) -> int:
+        """Current virtual step."""
+        with self._lock:
+            return self._step
+
+    def active(self) -> int:
+        """Requests not yet terminal (queued or in the pipeline)."""
+        with self._lock:
+            return sum(1 for t in self._reqs.values()
+                       if t.state not in _TERMINAL)
+
+    def active_slots(self) -> list:
+        """Snapshot of slot occupancy (rid or None per slot)."""
+        with self._lock:
+            return list(self._slots)
+
+    def drain(self, max_steps: int = 100_000) -> int:
+        """Step until every submitted request is terminal.  Raises on
+        starvation (the no-starvation invariant the property suite checks)."""
+        steps = 0
+        while self.active() > 0:
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"batcher did not drain within {max_steps} steps: "
+                    f"{self.active()} request(s) still live")
+            self.step_once()
+            steps += 1
+        return steps
+
+    def run(self, arrivals: list) -> dict:
+        """Drive a full trace: `arrivals` is a list of (step, prompt_len,
+        max_new) tuples (sorted by step).  Submits each at its step, then
+        drains.  Returns :meth:`stats`."""
+        pending = sorted(arrivals, key=lambda a: a[0])
+        i = 0
+        while i < len(pending) or self.active() > 0:
+            now = self._step
+            while i < len(pending) and pending[i][0] <= now:
+                _, plen, mnew = pending[i]
+                self.submit(plen, mnew, step=now)
+                i += 1
+            self.step_once()
+        return self.stats()
+
+    def timeline(self) -> list:
+        """The event log: [kind, "req{rid}", step] rows, in order."""
+        with self._lock:
+            return [list(e) for e in self._events]
+
+    def stats(self) -> dict:
+        """Latency/TTFT percentiles, goodput, and counters — in modeled
+        seconds (virtual steps x step_s)."""
+        with self._lock:
+            tracks = list(self._reqs.values())
+        done = [t for t in tracks if t.state == DONE]
+        rejected = sum(1 for t in tracks if t.state == REJECTED)
+        lat = [(t.t_done - t.req.arrival) * self.step_s for t in done]
+        ttft = [(t.t_decode - t.req.arrival) * self.step_s for t in done]
+        tokens = sum(t.tokens for t in done)
+        if done:
+            span = (max(t.t_done for t in done)
+                    - min(t.req.arrival for t in done) + 1)
+        else:
+            span = 0
+        makespan_s = span * self.step_s
+        return {
+            "completed": len(done),
+            "rejected": rejected,
+            "total_tokens": tokens,
+            "makespan_s": makespan_s,
+            "latency_p50_s": _percentile(lat, 50),
+            "latency_p99_s": _percentile(lat, 99),
+            "ttft_p50_s": _percentile(ttft, 50),
+            "ttft_p99_s": _percentile(ttft, 99),
+            "goodput_tok_s": tokens / makespan_s if makespan_s > 0 else 0.0,
+        }
+
+
+class FixedBatchScheduler:
+    """Run-to-completion fixed batching — the baseline continuous batching
+    beats.  Requests are grouped into consecutive batches of `max_slots` in
+    arrival order; a batch prefills its members serially (monolithic: the
+    same device prefills and decodes), then decodes until its *slowest*
+    member finishes — freed rows idle, the queue waits."""
+
+    def __init__(self, max_slots: int, *,
+                 prefill_steps: Union[int, Callable[[Request], int]] = 1,
+                 step_s: float = 1e-2):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.max_slots = int(max_slots)
+        self.step_s = float(step_s)
+        self._prefill_steps = prefill_steps
+
+    def run(self, arrivals: list) -> dict:
+        """Same trace format as :meth:`ContinuousBatcher.run`."""
+        reqs = [Request(i, int(a[0]), int(a[1]), int(a[2]))
+                for i, a in enumerate(sorted(arrivals, key=lambda a: a[0]))]
+        lat: list[float] = []
+        ttft: list[float] = []
+        tokens = 0
+        prev_end = 0
+        last_done = 0
+        for b0 in range(0, len(reqs), self.max_slots):
+            batch = reqs[b0:b0 + self.max_slots]
+            start = max(prev_end, max(r.arrival for r in batch))
+            psteps = sum(
+                max(1, (self._prefill_steps(r)
+                        if callable(self._prefill_steps)
+                        else int(self._prefill_steps)))
+                for r in batch)
+            decode_start = start + psteps     # first token for every member
+            end = decode_start + max(r.max_new for r in batch) - 1
+            for r in batch:
+                lat.append((end - r.arrival) * self.step_s)
+                ttft.append((decode_start - r.arrival) * self.step_s)
+                tokens += r.max_new
+            prev_end = end + 1
+            last_done = end
+        span = (last_done - min(r.arrival for r in reqs) + 1) if reqs else 0
+        makespan_s = span * self.step_s
+        return {
+            "completed": len(reqs),
+            "rejected": 0,
+            "total_tokens": tokens,
+            "makespan_s": makespan_s,
+            "latency_p50_s": _percentile(lat, 50),
+            "latency_p99_s": _percentile(lat, 99),
+            "ttft_p50_s": _percentile(ttft, 50),
+            "ttft_p99_s": _percentile(ttft, 99),
+            "goodput_tok_s": tokens / makespan_s if makespan_s > 0 else 0.0,
+        }

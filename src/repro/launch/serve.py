@@ -1,6 +1,9 @@
-"""Serving launcher: batched greedy decode against a KV cache.
+"""Serving launcher: fixed-batch greedy decode, or the continuous-batching
+serving tier (monolithic or disaggregated prefill/decode over a WAN path).
 
   python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --tokens 16
+  python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --engine disagg \
+      --requests 8
 """
 from __future__ import annotations
 
@@ -12,8 +15,34 @@ import numpy as np
 
 from repro.configs import (SHAPES, CommConfig, RunConfig, ShapeConfig,
                            TrainConfig, get_config, smoke_config)
+from repro.core.path import WAN_LONDON_POZNAN, WidePath
 from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.runtime import Server
+from repro.runtime import Server, ServingEngine
+
+
+def _run_engine(rc, mesh, args) -> None:
+    path = None
+    if args.engine == "disagg":
+        path = WidePath(axis="pod", comm=CommConfig(streams=args.streams),
+                        link=WAN_LONDON_POZNAN, name="kvship")
+    eng = ServingEngine(rc, mesh, mode=args.engine, path=path)
+    rng = np.random.default_rng(args.seed)
+    S = rc.shape.seq_len
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, max(5, S // 4)))
+        mnew = int(rng.integers(1, max(2, min(args.tokens, S - plen))))
+        prompt = rng.integers(1, rc.model.vocab_size, size=plen)
+        eng.submit(prompt, mnew)
+    t0 = time.perf_counter()
+    stats = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    print(f"[serve] engine={args.engine} slots={rc.shape.global_batch} "
+          f"completed={stats['completed']} tokens={stats['total_tokens']} "
+          f"in {dt:.2f}s wall")
+    print(f"[serve] modeled: p50={stats['latency_p50_s']*1e3:.1f}ms "
+          f"p99={stats['latency_p99_s']*1e3:.1f}ms "
+          f"ttft_p50={stats['ttft_p50_s']*1e3:.1f}ms "
+          f"goodput={stats['goodput_tok_s']:.1f} tok/s")
 
 
 def main():
@@ -23,6 +52,15 @@ def main():
     ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--cache-len", type=int, default=None)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--engine", choices=["fixed", "mono", "disagg"],
+                    default="fixed",
+                    help="fixed: legacy one-batch decode; mono/disagg: "
+                         "the continuous-batching serving tier")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="seeded request count for --engine mono/disagg")
+    ap.add_argument("--streams", type=int, default=16,
+                    help="WAN streams for the disaggregated KV ship")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
@@ -45,6 +83,9 @@ def main():
 
     rc = RunConfig(model=cfg, shape=shape, comm=CommConfig(), train=TrainConfig())
     with jax.set_mesh(mesh):
+        if args.engine != "fixed":
+            _run_engine(rc, mesh, args)
+            return
         server = Server(rc, mesh)
         prompts = np.random.default_rng(0).integers(
             0, cfg.vocab_size, size=(B, 1)).astype(np.int32)

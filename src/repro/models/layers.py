@@ -63,13 +63,19 @@ def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (B, S, H, D); positions: (S,) absolute positions."""
+    """x: (B, S, H, D); positions: (S,) absolute positions, or (B, S)
+    per-sequence positions (continuous batching: each slot sits at its own
+    depth)."""
     B, S, H, D = x.shape
     half = D // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (S, half)
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (S|B,S, half)
+    if ang.ndim == 2:
+        cos = jnp.cos(ang)[None, :, None, :]
+        sin = jnp.sin(ang)[None, :, None, :]
+    else:
+        cos = jnp.cos(ang)[:, :, None, :]
+        sin = jnp.sin(ang)[:, :, None, :]
     xf = x.astype(jnp.float32)
     x1, x2 = xf[..., :half], xf[..., half:2 * half]
     rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
@@ -161,7 +167,9 @@ def decode_attention(p: dict, x: jax.Array, dims: AttnDims, *,
     """One-token attention against a cache.
 
     x: (B, 1, d); k_cache/v_cache: (B, W, KH, Dh).  `pos` is the number of
-    tokens already in the cache (the new token's absolute position).  When
+    tokens already in the cache (the new token's absolute position) — a
+    scalar when every row sits at the same depth, or a (B,) vector when the
+    serving tier's continuous batcher has each slot at its own depth.  When
     `ring` (sliding window), the cache is a ring buffer of width W and keys
     were rope'd at insertion; otherwise W == max_len and slot i == position i.
     Returns (attn_out (B,1,n_q), new_k_cache, new_v_cache).
@@ -178,26 +186,44 @@ def decode_attention(p: dict, x: jax.Array, dims: AttnDims, *,
     q = q.reshape(B, 1, H, Dh)
     k = k.reshape(B, 1, KH, Dh)
     v = v.reshape(B, 1, KH, Dh)
+    vec = getattr(pos, "ndim", 0) >= 1       # per-sequence positions (B,)
     if dims.rope_theta:
-        ppos = jnp.full((1,), pos, jnp.int32)
+        if vec:
+            ppos = pos.astype(jnp.int32).reshape(B, 1)
+        else:
+            ppos = jnp.full((1,), pos, jnp.int32)
         q = apply_rope(q, ppos, dims.rope_theta)
         k = apply_rope(k, ppos, dims.rope_theta)
-    slot = jnp.where(ring, pos % W, jnp.minimum(pos, W - 1)) if ring else pos
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    if vec:
+        slot_v = jnp.mod(pos, W) if ring else jnp.minimum(pos, W - 1)
+        rows = jnp.arange(B)
+        k_cache = k_cache.at[rows, slot_v].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, slot_v].set(v[:, 0].astype(v_cache.dtype))
+    else:
+        slot = jnp.where(ring, pos % W, jnp.minimum(pos, W - 1)) if ring else pos
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
 
     qf = (q.astype(jnp.float32) * Dh ** -0.5).reshape(B, 1, KH, g, Dh)
     kf = k_cache.astype(jnp.float32)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)          # (B,KH,g,1,W)
     s = constrain(s, None, None, None, None, TP_AXIS)
     idx = jnp.arange(W)
-    if ring:
-        # slot j holds absolute position pos - ((pos - j) mod W); valid iff >= 0
-        absp = pos - jnp.mod(pos - idx, W)
-        valid = absp >= 0
+    if vec:
+        pb = pos[:, None]                                # (B, 1)
+        if ring:
+            valid = (pb - jnp.mod(pb - idx[None, :], W)) >= 0
+        else:
+            valid = idx[None, :] <= pb                   # (B, W)
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        if ring:
+            # slot j holds absolute position pos - ((pos - j) mod W); valid iff >= 0
+            absp = pos - jnp.mod(pos - idx, W)
+            valid = absp >= 0
+        else:
+            valid = idx <= pos
+        s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
     p_attn = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p_attn, v_cache.astype(jnp.float32))
     o = o.reshape(B, 1, H * Dh).astype(x.dtype)

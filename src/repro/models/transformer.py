@@ -296,12 +296,16 @@ class Transformer:
     def decode_step(self, params: dict, cache: dict, pos: jax.Array,
                     tokens: jax.Array, *, gather: Gather = None) -> tuple[jax.Array, dict]:
         """One-token decode. tokens: (B, 1); pos: scalar int32 (tokens already
-        in cache).  Returns (logits (B,1,V), updated cache)."""
+        in cache), or a (B,) int32 vector when continuous batching has each
+        slot at its own depth.  Returns (logits (B,1,V), updated cache)."""
         c = self.cfg
         gather = gather or _identity_gather
         x = jnp.take(params["embed"], tokens, axis=0)
         if not c.rope_theta:
-            x = x + L.sinusoidal_positions(jnp.full((1,), pos), c.d_model).astype(x.dtype)[None]
+            if getattr(pos, "ndim", 0) >= 1:
+                x = x + L.sinusoidal_positions(pos, c.d_model).astype(x.dtype)[:, None, :]
+            else:
+                x = x + L.sinusoidal_positions(jnp.full((1,), pos), c.d_model).astype(x.dtype)[None]
         ring = c.sliding_window is not None
         has_cross = bool(c.encoder_layers)
 

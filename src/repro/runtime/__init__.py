@@ -1,4 +1,5 @@
-from repro.runtime.serve_loop import Server  # noqa: F401
+from repro.runtime.serve_loop import Server, ServeResult  # noqa: F401
+from repro.runtime.serving import ServingEngine  # noqa: F401
 from repro.runtime.step import StepBundle, build_serve_step, build_train_step  # noqa: F401
 from repro.runtime.train_loop import (InjectedFault, StragglerDetector,  # noqa: F401
                                       Trainer, elastic_restart)

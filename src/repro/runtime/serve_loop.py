@@ -1,4 +1,15 @@
-"""Server: batched prefill + decode serving loop."""
+"""Server: batched prefill + decode serving loop.
+
+The decode loop supports two position modes:
+
+* scalar ``pos`` — every row of the batch sits at the same depth (the
+  original fixed-batch path; one traced program, unchanged semantics);
+* per-sequence ``(B,)`` positions — rows sit at different depths, as the
+  continuous batcher requires (each slot's request prefilled a different
+  prompt length).  Finished rows (EOS or per-row budget) stop counting
+  toward output lengths and the loop exits as soon as every row is done,
+  so freed slots return to the scheduler instead of idling to ``max_new``.
+"""
 from __future__ import annotations
 
 import time
@@ -19,16 +30,17 @@ from repro.runtime.step import build_serve_step
 
 @dataclass
 class ServeResult:
-    tokens: np.ndarray            # (B, generated)
+    tokens: np.ndarray            # (B, steps); rows padded after they finish
     steps: int
+    lengths: Optional[np.ndarray] = None   # (B,) tokens generated per row
 
 
 class Server:
     """Greedy batched decoding against the decode StepBundle.
 
-    Production serving would add continuous batching and paged caches; this
-    server exercises the assigned decode cells (one-token steps against a
-    seq_len cache) and the examples.
+    Production serving layers the continuous batcher (`core.serving`) and
+    the KV shipper (`core.kvship`) on top — see `runtime.serving`.  This
+    loop is the per-step engine both modes share.
     """
 
     def __init__(self, rc: RunConfig, mesh, params=None, seed: int = 0):
@@ -38,7 +50,11 @@ class Server:
         sh = self._sh(self.bundle.state_specs["params"])
         params = params if params is not None else tree_init(self.bundle.param_defs, seed)
         self.params = jax.device_put(params, sh)
-        self._warm_shapes: set = set()   # batch sizes bundle.fn has compiled
+        # signatures bundle.fn has compiled: (B, pos kind, cache geometry).
+        # A new cache geometry (e.g. a longer max_len cache swapped in) or a
+        # switch between scalar and vector pos recompiles just like a new
+        # batch size does — all three must be excluded from timings.
+        self._warm_shapes: set = set()
 
     def _sh(self, specs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
@@ -49,26 +65,65 @@ class Server:
         cache = ti(self.bundle.cache_defs, 0)      # zeros
         return jax.device_put(cache, self._sh(self.bundle.state_specs["cache"]))
 
+    @staticmethod
+    def _compile_sig(B: int, vec: bool, cache) -> tuple:
+        geom = tuple(sorted((n, tuple(x.shape), str(x.dtype))
+                            for n, x in cache.items()))
+        return (B, "vec" if vec else "scalar", geom)
+
     def generate(self, prompt_tokens: np.ndarray, max_new: int = 16,
-                 prefill_pos: Optional[int] = None) -> ServeResult:
-        """prompt_tokens: (B, 1) last prompt token per sequence (the cache is
-        zeros here — real deployments prefill; see examples/serve_decode.py)."""
+                 prefill_pos: Optional[Any] = None, *,
+                 eos_id: Optional[int] = None,
+                 max_new_per_seq: Optional[np.ndarray] = None,
+                 cache=None, pad_id: int = 0) -> ServeResult:
+        """prompt_tokens: (B, 1) last prompt token per sequence.
+
+        `prefill_pos` is a scalar (all rows at one depth) or a (B,) vector
+        of per-row depths; pass `cache=` to decode against a prefilled cache
+        (the default zero cache exercises the step shape only).  `eos_id`
+        and `max_new_per_seq` finish rows early; the loop stops once every
+        row is done and `ServeResult.lengths` reports per-row token counts.
+        """
         B = prompt_tokens.shape[0]
-        cache = self.init_cache()
-        pos = jnp.int32(prefill_pos if prefill_pos is not None else 0)
+        if cache is None:
+            cache = self.init_cache()
+        vec = (max_new_per_seq is not None
+               or (prefill_pos is not None and np.ndim(prefill_pos) >= 1))
+        sig = self._compile_sig(B, vec, cache)
+        if vec:
+            pos0 = (np.zeros(B, np.int32) if prefill_pos is None
+                    else np.asarray(prefill_pos, np.int32).reshape(B))
+            pos_base = jnp.asarray(pos0)
+        else:
+            pos_base = jnp.int32(prefill_pos if prefill_pos is not None else 0)
+        budget = (np.full(B, max_new, np.int64) if max_new_per_seq is None
+                  else np.asarray(max_new_per_seq, np.int64).reshape(B))
         tok = jax.device_put(jnp.asarray(prompt_tokens, jnp.int32),
                              self._sh(self.bundle.batch_specs["tokens"]))
         out = []
+        lengths = np.zeros(B, np.int64)
+        done = lengths >= budget
         tele = get_telemetry()
         path_key = self.bundle.path.key
-        for i in range(max_new):
+        steps = 0
+        for i in range(int(budget.max(initial=0))):
+            if done.all():
+                break
             t0 = time.perf_counter()
-            logits, cache = self.bundle.fn(self.params, cache, pos + i, tok)
+            logits, cache = self.bundle.fn(self.params, cache, pos_base + i, tok)
             tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
             step_tok = np.asarray(tok)[:, 0]          # blocks on the step
-            if B in self._warm_shapes:
+            if sig in self._warm_shapes:
                 tele.record(path_key, time.perf_counter() - t0, step=i)
-            else:   # first call per batch shape is compile-dominated: skip
-                self._warm_shapes.add(B)
-            out.append(step_tok)
-        return ServeResult(tokens=np.stack(out, axis=1), steps=max_new)
+            else:   # first call per compile signature is compile-dominated
+                self._warm_shapes.add(sig)
+            active = ~done
+            lengths += active
+            if eos_id is not None:
+                done = done | (active & (step_tok == eos_id))
+            done = done | (lengths >= budget)
+            out.append(np.where(active, step_tok, pad_id))
+            steps += 1
+        tokens = (np.stack(out, axis=1) if out
+                  else np.zeros((B, 0), np.int64))
+        return ServeResult(tokens=tokens, steps=steps, lengths=lengths)

@@ -707,6 +707,14 @@ def build_serve_step(rc: RunConfig, mesh, kind: Optional[str] = None) -> StepBun
 
         def body(params, cache, pos, tokens):
             p = gather_top(params)
+            if getattr(pos, "ndim", 0) >= 1 and batch_shardable and manual:
+                # per-sequence positions arrive replicated (full (B,));
+                # slice this shard's rows to line up with its cache rows
+                idx = jnp.int32(0)
+                for a in dp:
+                    idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+                b_local = tokens.shape[0]
+                pos = jax.lax.dynamic_slice_in_dim(pos, idx * b_local, b_local)
             logits, new_cache = model.decode_step(p, cache, pos, tokens,
                                                   gather=gather_layer)
             return logits, new_cache

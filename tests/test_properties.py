@@ -224,3 +224,88 @@ def test_delta_merge_zero_anchor_is_the_plain_average(seed, nsites):
     # non-members pass through bit-untouched
     out = merged[f"s{nsites - 1}"]
     assert out.tobytes() == params[f"s{nsites - 1}"].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# serving scheduler invariants (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+from repro.core.serving import ContinuousBatcher, DONE, REJECTED  # noqa: E402
+
+
+def _random_trace(seed: int, n: int) -> list:
+    rng = np.random.default_rng(seed)
+    steps = np.cumsum(rng.integers(0, 4, size=n))
+    return [(int(s), int(rng.integers(1, 64)), int(rng.integers(1, 12)))
+            for s in steps]
+
+
+@given(seed=st.integers(0, 40), max_slots=st.sampled_from([1, 2, 4]),
+       queue_limit=st.sampled_from([0, 2, 16]))
+def test_scheduler_slots_never_double_booked(seed, max_slots, queue_limit):
+    """At every virtual step: occupancy <= max_slots, no rid in two slots,
+    and every slotted rid is live (a freed slot never keeps a stale rid)."""
+    b = ContinuousBatcher(max_slots, queue_limit, prefill_steps=2,
+                          ship_steps=1)
+    trace = _random_trace(seed, 24)
+    i = 0
+    guard = 0
+    while i < len(trace) or b.active() > 0:
+        now = b.now()
+        while i < len(trace) and trace[i][0] <= now:
+            b.submit(trace[i][1], trace[i][2], step=now)
+            i += 1
+        b.step_once()
+        slots = b.active_slots()
+        assert len(slots) == max_slots
+        rids = [r for r in slots if r is not None]
+        assert len(rids) == len(set(rids)), f"slot double-booked: {slots}"
+        for rid in rids:
+            assert b._reqs[rid].state not in (DONE, REJECTED)
+        guard += 1
+        assert guard < 10_000
+
+
+@given(seed=st.integers(0, 40), max_slots=st.sampled_from([1, 3]),
+       queue_limit=st.sampled_from([0, 1, 8]))
+def test_scheduler_every_request_terminates(seed, max_slots, queue_limit):
+    """No starvation: under random arrivals every admitted request reaches
+    DONE, every rejected one is terminal at submit time, and completed
+    requests generated exactly their asked-for output length."""
+    b = ContinuousBatcher(max_slots, queue_limit, prefill_steps=1,
+                          ship_steps=2)
+    trace = _random_trace(seed, 20)
+    admitted, rejected = [], []
+    i = 0
+    while i < len(trace) or b.active() > 0:
+        now = b.now()
+        while i < len(trace) and trace[i][0] <= now:
+            rid = b.submit(trace[i][1], trace[i][2], step=now)
+            (admitted if rid is not None else rejected).append(trace[i])
+            i += 1
+        b.step_once()
+    b.drain()
+    stats = b.stats()
+    assert stats["completed"] == len(admitted)
+    assert stats["rejected"] == len(rejected)
+    # per-request output lengths honored even though sequences finish at
+    # different steps: token totals are the sum of the admitted max_new
+    assert stats["total_tokens"] == sum(t[2] for t in admitted)
+    for tr in b._reqs.values():
+        assert tr.state in (DONE, REJECTED)
+        if tr.state == DONE:
+            assert tr.tokens == tr.req.max_new
+            assert tr.slot is None
+
+
+@given(n=st.integers(1, 30), queue_limit=st.sampled_from([0, 4]))
+def test_scheduler_admission_bounded_by_queue_limit(n, queue_limit):
+    """A burst of n simultaneous submits admits at most queue_limit beyond
+    what slots drain; rejections are immediate and terminal."""
+    b = ContinuousBatcher(2, queue_limit, prefill_steps=1, ship_steps=0)
+    rids = [b.submit(8, 2) for _ in range(n)]
+    admitted = [r for r in rids if r is not None]
+    assert len(admitted) == min(n, queue_limit)
+    assert b.stats()["rejected"] == n - len(admitted)
+    b.drain()
+    assert b.stats()["completed"] == len(admitted)

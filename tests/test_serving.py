@@ -1,0 +1,315 @@
+"""Serving-tier acceptance suite (ISSUE 9).
+
+1. Disaggregated prefill-site/decode-site serving produces **bit-identical**
+   tokens to monolithic single-site serving for the same seed (decode is
+   row-local and the ``none`` codec ships bytes unchanged).
+2. Golden schedule: a seeded 8-request trace through the continuous batcher
+   yields a pinned admit/prefill/ship/decode/complete timeline, identical
+   across two runs (same style as test_chaos/test_elastic).
+3. KV-ship byte accounting: telemetry wire bytes under ``serve/req{id}/kv``
+   exactly equal the planned KV leaf bytes, per hop, for every codec.
+4. The `Server.generate` bugfix: per-sequence positions/budgets with EOS
+   early-exit, and `_warm_shapes` keyed on cache geometry too.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import (CommConfig, RunConfig, ShapeConfig, TrainConfig,
+                           get_config, smoke_config)
+from repro.core.api import MPW
+from repro.core.kvship import kv_cache_bytes, plan_kv_ship, ship_kv
+from repro.core.path import (WAN_LONDON_POZNAN, WAN_POZNAN_GDANSK, Hop,
+                             WidePath)
+from repro.core.serving import ContinuousBatcher
+from repro.core.telemetry import get_telemetry
+
+GOLDEN_TRACE = [(0, 8, 3), (0, 16, 2), (1, 8, 4), (2, 8, 1), (2, 24, 2),
+                (3, 8, 2), (3, 8, 3), (4, 8, 2)]
+
+GOLDEN_TIMELINE = [
+    ["admit", "req0", 0], ["admit", "req1", 0], ["prefill", "req0", 0],
+    ["admit", "req2", 1], ["ship", "req0", 1], ["prefill", "req1", 1],
+    ["admit", "req3", 2], ["admit", "req4", 2], ["decode", "req0", 2],
+    ["admit", "req5", 3], ["reject", "req6", 3], ["ship", "req1", 3],
+    ["reject", "req7", 4], ["decode", "req1", 4], ["complete", "req0", 4],
+    ["prefill", "req2", 4], ["ship", "req2", 5], ["complete", "req1", 5],
+    ["prefill", "req3", 5], ["ship", "req3", 6], ["decode", "req2", 6],
+    ["decode", "req3", 7], ["complete", "req3", 7], ["prefill", "req4", 7],
+    ["complete", "req2", 9], ["ship", "req4", 10], ["prefill", "req5", 10],
+    ["ship", "req5", 11], ["decode", "req4", 11], ["decode", "req5", 12],
+    ["complete", "req4", 12], ["complete", "req5", 13],
+]
+
+
+def _golden_batcher() -> ContinuousBatcher:
+    return ContinuousBatcher(
+        2, 4, prefill_steps=lambda r: max(1, r.prompt_len // 8),
+        ship_steps=1, step_s=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# golden schedule (pure core, no devices)
+# ---------------------------------------------------------------------------
+
+def test_golden_schedule_timeline_and_stats():
+    b = _golden_batcher()
+    stats = b.run(GOLDEN_TRACE)
+    assert b.timeline() == GOLDEN_TIMELINE
+    assert stats["completed"] == 6
+    assert stats["rejected"] == 2
+    assert stats["total_tokens"] == 14
+    assert stats["latency_p50_s"] == pytest.approx(0.065)
+    assert stats["latency_p99_s"] == pytest.approx(0.1)
+    assert stats["ttft_p50_s"] == pytest.approx(0.05)
+    assert stats["ttft_p99_s"] == pytest.approx(0.09)
+    assert stats["goodput_tok_s"] == pytest.approx(100.0)
+
+
+def test_golden_schedule_run_twice_identical():
+    runs = []
+    for _ in range(2):
+        b = _golden_batcher()
+        stats = b.run(GOLDEN_TRACE)
+        runs.append((b.timeline(), stats))
+    assert runs[0] == runs[1]
+
+
+def test_mpw_serve_verbs_drive_the_same_schedule():
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(link=WAN_LONDON_POZNAN)
+    b = mpw.Serve(pid, max_slots=2, queue_limit=4,
+                  prefill_steps=lambda r: max(1, r.prompt_len // 8),
+                  ship_steps=1, step_s=1e-2)
+    for step, plen, mnew in GOLDEN_TRACE:
+        while b.now() < step:
+            b.step_once()
+        mpw.Admit(pid, plen, mnew)
+    out = mpw.ServeStats(pid, drain=True)
+    assert out["timeline"] == GOLDEN_TIMELINE
+    assert out["completed"] == 6 and out["rejected"] == 2
+    mpw.Finalize()
+
+
+def test_mpw_serve_kv_bytes_model():
+    mpw = MPW.Init()
+    pid = mpw.CreatePath(link=WAN_LONDON_POZNAN)
+    cfg = get_config("llama3.2-3b")
+    per_req = lambda r: kv_cache_bytes(cfg.num_layers, cfg.num_kv_heads,
+                                       cfg.resolved_head_dim, r.prompt_len)
+    b = mpw.Serve(pid, max_slots=2, kv_bytes=per_req, step_s=25e-3)
+    assert mpw.Admit(pid, 256, 2) == 0
+    stats = mpw.ServeStats(pid)
+    assert stats["completed"] == 1
+    # a 256-token KV cache on a 125 MB/s WAN link takes real ship steps:
+    # TTFT must exceed the 2 virtual steps of admit->prefill alone
+    assert stats["ttft_p50_s"] > 2 * 25e-3
+    pid2 = mpw.CreatePath(link=WAN_LONDON_POZNAN)
+    with pytest.raises(ValueError, match="no serving scheduler"):
+        mpw.Admit(pid2, 8, 1)
+
+
+# ---------------------------------------------------------------------------
+# KV-ship byte accounting (planner + codecs, no devices)
+# ---------------------------------------------------------------------------
+
+def _two_hop_path(compress: str = "none") -> WidePath:
+    comm = CommConfig(streams=4, chunk_mb=0.001, compress=compress)
+    hops = (Hop(name="hop0-lon-poz", link=WAN_LONDON_POZNAN, comm=comm),
+            Hop(name="hop1-poz-gda", link=WAN_POZNAN_GDANSK, comm=comm))
+    return WidePath(axis="pod", comm=comm, name="kvship").with_hops(hops)
+
+
+@pytest.mark.parametrize("compress", ["none", "bf16", "int8"])
+def test_kv_ship_exact_wire_bytes_per_hop(compress):
+    rng = np.random.default_rng(3)
+    kv = {"k": rng.standard_normal((4, 24, 2, 8)).astype(np.float32),
+          "v": rng.standard_normal((4, 24, 2, 8)).astype(np.float32)}
+    path = _two_hop_path(compress)
+    plan = plan_kv_ship(kv, path)
+    assert plan.payload_bytes == sum(a.nbytes for a in kv.values())
+    if compress == "none":
+        assert plan.wire_bytes_hop == plan.payload_bytes
+    tel = get_telemetry()
+    rid = {"none": 900, "bf16": 901, "int8": 902}[compress]
+    key = f"serve/req{rid}/kv"
+    tel.reset(key)
+    out, res = ship_kv(kv, plan, rid)
+    # telemetry wire bytes == planned wire bytes, end-to-end and per hop
+    assert res.wire_bytes_hop == plan.wire_bytes_hop
+    assert res.wire_bytes_total == plan.wire_bytes_hop * 2
+    assert tel.path(key).total_bytes == plan.wire_bytes_hop * 2
+    for i, hop in enumerate(path.route):
+        hop_key = f"{key}/hop{i}:{hop.name}"
+        assert tel.path(hop_key).total_bytes == plan.wire_bytes_hop, hop_key
+    if compress == "none":
+        # the none codec is bit-identical across the whole route
+        for n in kv:
+            np.testing.assert_array_equal(out[n], kv[n])
+    else:
+        for n in kv:
+            assert out[n].shape == kv[n].shape
+            np.testing.assert_allclose(out[n], kv[n], atol=0.2)
+
+
+def test_kv_ship_plan_rejects_geometry_drift():
+    kv = {"k": np.zeros((4, 8, 2, 8), np.float32),
+          "v": np.zeros((4, 8, 2, 8), np.float32)}
+    plan = plan_kv_ship(kv, _two_hop_path())
+    grown = {"k": np.zeros((4, 9, 2, 8), np.float32), "v": kv["v"]}
+    with pytest.raises(ValueError, match="re-plan on cache-geometry change"):
+        ship_kv(grown, plan, 903)
+
+
+def test_kv_cache_bytes_formula():
+    # bf16 k+v leaves: 2 bytes * 2 leaves * nL * S * KH * Dh
+    assert kv_cache_bytes(4, 2, 32, 8) == 2 * 2 * 4 * 8 * 2 * 32
+
+
+# ---------------------------------------------------------------------------
+# disaggregated vs monolithic engine parity (real model, single process)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_rc():
+    from repro.launch.mesh import make_local_mesh
+    cfg = smoke_config(get_config("llama3.2-3b"))
+    rc = RunConfig(model=cfg, shape=ShapeConfig("d", 64, 3, "decode"),
+                   comm=CommConfig(), train=TrainConfig())
+    return rc, make_local_mesh()
+
+
+def _requests(cfg, seed=7):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, cfg.vocab_size, size=int(pl)), int(mn))
+            for pl, mn in [(8, 5), (12, 3), (8, 7), (16, 4), (12, 6)]]
+
+
+def test_disagg_bit_identical_to_mono(serve_rc):
+    from repro.runtime.serving import ServingEngine
+    rc, mesh = serve_rc
+    reqs = _requests(rc.model)
+    wan = WidePath(axis="pod", comm=CommConfig(streams=4, chunk_mb=0.001),
+                   link=WAN_LONDON_POZNAN, name="kvship")
+    engines = {}
+    for mode, path in (("mono", None), ("disagg", wan)):
+        eng = ServingEngine(rc, mesh, mode=mode, path=path, seed=0)
+        for prompt, mnew in reqs:
+            assert eng.submit(prompt, mnew) is not None
+        stats = eng.run_to_completion()
+        assert stats["completed"] == len(reqs)
+        engines[mode] = eng
+    mono, disagg = engines["mono"], engines["disagg"]
+    # same schedule, and every request's tokens bit-identical
+    assert mono.batcher.timeline() == disagg.batcher.timeline()
+    assert sorted(mono.results) == sorted(disagg.results)
+    for rid in mono.results:
+        np.testing.assert_array_equal(mono.results[rid], disagg.results[rid])
+        assert len(mono.results[rid]) == reqs[rid][1]   # max_new honored
+
+
+def test_disagg_engine_telemetry_byte_accounting(serve_rc):
+    from repro.runtime.serving import ServingEngine
+    rc, mesh = serve_rc
+    cfg = rc.model
+    wan = WidePath(axis="pod", comm=CommConfig(streams=4, chunk_mb=0.001),
+                   link=WAN_LONDON_POZNAN, name="kvship")
+    tel = get_telemetry()
+    eng = ServingEngine(rc, mesh, mode="disagg", path=wan, seed=0)
+    reqs = _requests(cfg)
+    # rids restart at 0 per batcher but telemetry is process-global: clear
+    # any serve/req{rid}/kv slots earlier tests recorded under the same rids
+    for rid in range(len(reqs)):
+        key = f"serve/req{rid}/kv"
+        tel.reset(key)
+        for h, hop in enumerate(wan.route):
+            tel.reset(f"{key}/hop{h}:{hop.name}")
+    for prompt, mnew in reqs:
+        eng.submit(prompt, mnew)
+    eng.run_to_completion()
+    Dh = cfg.resolved_head_dim
+    for rid, (prompt, _mnew) in enumerate(reqs):
+        expect = kv_cache_bytes(cfg.num_layers, cfg.num_kv_heads, Dh,
+                                len(prompt))
+        key = f"serve/req{rid}/kv"
+        assert tel.path(key).total_bytes == expect * wan.n_hops, key
+        for h, hop in enumerate(wan.route):
+            hop_key = f"{key}/hop{h}:{hop.name}"
+            assert tel.path(hop_key).total_bytes == expect, hop_key
+
+
+# ---------------------------------------------------------------------------
+# Server bugfix: per-sequence positions, EOS early-exit, warm-shape keys
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def server(serve_rc):
+    from repro.runtime.serve_loop import Server
+    rc, mesh = serve_rc
+    rc2 = replace(rc, shape=ShapeConfig("d", 64, 2, "decode"))
+    return Server(rc2, mesh, seed=0)
+
+
+def test_server_vector_pos_matches_single_row_runs(server):
+    prompts = np.array([[5], [9]], np.int32)
+    res = server.generate(prompts, max_new=4,
+                          prefill_pos=np.array([3, 7], np.int32))
+    assert res.tokens.shape == (2, 4)
+    assert res.lengths.tolist() == [4, 4]
+    # each row must equal a batch run at that row's scalar depth (decode is
+    # row-local; the vector-pos path may not leak across rows)
+    for row, p in ((0, 3), (1, 7)):
+        ref = server.generate(
+            np.repeat(prompts[row:row + 1], 2, axis=0), max_new=4,
+            prefill_pos=p)
+        np.testing.assert_array_equal(res.tokens[row], ref.tokens[0])
+
+
+def test_server_per_seq_budget_and_padding(server):
+    prompts = np.array([[5], [9]], np.int32)
+    res = server.generate(prompts, max_new=6,
+                          max_new_per_seq=np.array([2, 5]))
+    assert res.steps == 5                      # early exit before max_new=6
+    assert res.lengths.tolist() == [2, 5]
+    assert (res.tokens[0, 2:] == 0).all()      # freed row pads with pad_id
+
+
+def test_server_eos_early_exit(server):
+    prompts = np.array([[5], [9]], np.int32)
+    ref = server.generate(prompts, max_new=6, prefill_pos=0)
+    eos = int(ref.tokens[0, 1])
+    # row 0's EOS lands wherever greedy decode first emits that token
+    exp0 = int(np.argmax(ref.tokens[0] == eos)) + 1
+    res = server.generate(prompts, max_new=6, prefill_pos=0, eos_id=eos,
+                          pad_id=-1)
+    assert res.lengths[0] == exp0              # EOS counted, then row frees
+    assert (res.tokens[0, exp0:] == -1).all()
+    assert res.lengths[1] <= 6
+    # row 1's tokens before its own EOS/budget match the no-EOS run
+    n1 = int(res.lengths[1])
+    np.testing.assert_array_equal(res.tokens[1, :n1], ref.tokens[1, :n1])
+
+
+def test_server_warm_shapes_include_cache_geometry(server):
+    tel = get_telemetry()
+    key = server.bundle.path.key
+    prompts = np.array([[5], [9]], np.int32)
+
+    def transfers():
+        return tel.path(key).transfers
+
+    server.generate(prompts, max_new=3)        # warm the (B, scalar) sig
+    n0 = transfers()
+    server.generate(prompts, max_new=3)
+    assert transfers() - n0 == 3               # warm: every step recorded
+    # a new cache geometry forces a recompile: its first step must be
+    # excluded from timings even though B is unchanged
+    from repro.models.param import tree_init
+    cd = server.bundle.model.cache_defs(2, 32)   # shorter cache
+    small = tree_init(cd, 0)
+    n1 = transfers()
+    server.generate(prompts, max_new=3, cache=small)
+    assert transfers() - n1 == 2               # first step skipped again

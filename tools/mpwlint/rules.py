@@ -303,7 +303,7 @@ def rule_r3(ctx: ModuleContext) -> list[Finding]:
 #   {key}/delta          local-SGD cross-site delta syncs
 #   ckpt...              checkpoint paths (constant prefix)
 _KEY_TEMPLATES = {"{}", "{}/hop{}:{}", "{}/bkt{}", "{}/intra", "{}/wan",
-                  "{}/delta"}
+                  "{}/delta", "serve/req{}/kv"}
 _TEL_CALLS = {"note_plan", "record", "timed", "note_checksum_error", "path"}
 _TEL_KWARGS = {"tel_key", "tel_prefix"}
 
@@ -352,8 +352,9 @@ def rule_r4(ctx: ModuleContext) -> list[Finding]:
                 f"telemetry key literal {tpl!r} does not match the key "
                 f"grammar",
                 "keys must be `{key}`, `{key}/hop{i}:{leg}`, `{key}/bkt{i}`, "
-                "`{key}/intra`, `{key}/wan`, `{key}/delta`, or a `ckpt*` "
-                "constant — see docs/lint.md#r4"))
+                "`{key}/intra`, `{key}/wan`, `{key}/delta`, "
+                "`serve/req{rid}/kv`, or a `ckpt*` constant — see "
+                "docs/lint.md#r4"))
     return out
 
 
