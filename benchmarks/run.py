@@ -25,7 +25,7 @@ def main():
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,bloodflow,overlap,streams,"
                          "autotune,multihop,ring,filetransfer,"
-                         "chaos_recovery,elastic,serve_load,roofline")
+                         "chaos_recovery,elastic,serve_load,serve_chaos,roofline")
     ap.add_argument("--dry", action="store_true",
                     help="tiny payloads / few iterations (CI smoke mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -53,6 +53,9 @@ def main():
                     "local-SGD K-curve & elastic world resize"),
         "serve_load": ("benchmarks.serve_load",
                        "continuous-batching serving load vs fixed batches"),
+        "serve_chaos": ("benchmarks.serve_chaos",
+                        "fault-tolerant serving vs no-handling baseline "
+                        "under a light-path drop"),
         "roofline": ("benchmarks.roofline_report", "roofline report"),
     }
     chosen = args.only.split(",") if args.only else list(sections)

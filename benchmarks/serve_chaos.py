@@ -1,0 +1,174 @@
+"""Serving-under-chaos benchmark: fault-tolerant serving (SLO-aware
+shedding + retried/rerouted KV shipping) vs a no-handling baseline on the
+CosmoGrid testbed while the amsterdam->tokyo light path drops mid-trace.
+
+Both schedulers run the *same* seeded arrival trace with per-request
+deadlines over the same fault schedule:
+
+* **baseline** — no shedding, no retries: each KV ship pays the naive
+  wait-out model (`modeled_ship_steps` with the fault clock: a dead hop
+  burns the full socket watchdog), and hopeless requests are admitted
+  anyway, clogging the serial prefill server until the deadline sweep
+  times them out.
+* **handling** — SLO-aware admission sheds requests whose modeled
+  completion blows their deadline, and a `FaultAwareShipper` reships with
+  a short watchdog, reroutes over the tokyo-edinburgh backup after
+  ``max_reships``, and falls back to the primary once it heals.
+
+The assertion (and the ``serve_chaos`` section of the perf gate) is that
+handling beats baseline on both SLO attainment and goodput; the
+``*_goodput*`` / ``*speedup*`` keys feed `benchmarks/perf_gate.py`.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.chaos import IncidentLog
+from repro.core.kvship import kv_cache_bytes
+from repro.core.serving import (ContinuousBatcher, FaultAwareShipper,
+                                modeled_ship_steps)
+from repro.core.topology import Fault, cosmogrid_topology
+from repro.configs import get_config
+
+DRY = bool(os.environ.get("WIDEJAX_BENCH_DRY"))
+SEED = 1312
+N_REQUESTS = 48 if DRY else 256
+MAX_SLOTS = 16
+STEP_S = 0.5                     # coarse step: the backup link is slow
+MEAN_GAP_STEPS = 3.0
+PROMPT_LENS = (32, 64, 128)
+OUTPUT_LENS = (4, 8, 16)
+DEADLINE_STEPS = 80
+DROP_START = 30                  # light path dies while ships are in flight
+DROP_STOP = DROP_START + (150 if DRY else 600)
+
+RESULTS: dict = {}
+
+
+def make_trace(seed: int = SEED, n: int = N_REQUESTS) -> list:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(MEAN_GAP_STEPS, size=n)
+    steps = np.floor(np.cumsum(gaps)).astype(int)
+    plens = rng.choice(PROMPT_LENS, size=n)
+    mnews = rng.choice(OUTPUT_LENS, size=n)
+    return [(int(s), int(p), int(m), DEADLINE_STEPS)
+            for s, p, m in zip(steps, plens, mnews)]
+
+
+def _topology():
+    topo = cosmogrid_topology(backup_links=True)
+    prof = topo.link("amsterdam", "tokyo").with_fault(
+        Fault("drop", start=DROP_START, stop=DROP_STOP))
+    topo.connect("amsterdam", "tokyo", prof)
+    return topo
+
+
+def _kv_bytes(cfg):
+    Dh = cfg.resolved_head_dim
+
+    def kv(req) -> int:
+        return kv_cache_bytes(cfg.num_layers, cfg.num_kv_heads, Dh,
+                              req.prompt_len)
+    return kv
+
+
+def _prefill_steps(req) -> int:
+    return max(1, req.prompt_len // 64)
+
+
+def run() -> str:
+    cfg = get_config("llama3.2-3b")
+    kv = _kv_bytes(cfg)
+    trace = make_trace()
+
+    # -- baseline: no shedding, no retries, wait-for-heal -------------------
+    # a dead hop blocks the ship (TCP hanging on the broken light path)
+    # until the link heals, then transfers; no backup route is ever tried
+    base_topo = _topology()
+    base_route = base_topo.route("amsterdam", "tokyo")
+    base_prof = base_route.profiles[0]
+
+    def naive_ship(req, step) -> int:
+        at = int(step)
+        while not base_prof.health(at).alive and at < step + 100_000:
+            at += 1
+        return (at - int(step)) + modeled_ship_steps(
+            kv(req), step_s=STEP_S, step=at, route=base_route)
+
+    baseline = ContinuousBatcher(
+        MAX_SLOTS, N_REQUESTS, prefill_steps=_prefill_steps,
+        ship_steps=naive_ship, step_s=STEP_S, shed=False)
+    base_stats = baseline.run(trace)
+
+    # -- handling: shed + fault-aware reship/reroute ------------------------
+    log = IncidentLog()
+    topo = _topology()
+    shipper = FaultAwareShipper(
+        topo, "amsterdam", "tokyo", kv_bytes=kv, step_s=STEP_S,
+        max_reships=1, timeout_s=1.0, log=log, seed=SEED)
+    handling = ContinuousBatcher(
+        MAX_SLOTS, N_REQUESTS, prefill_steps=_prefill_steps,
+        step_s=STEP_S, shed=True, shipper=shipper, log=log,
+        prefill_site="amsterdam", decode_site="tokyo")
+    hand_stats = handling.run(trace)
+
+    slo_speedup = (hand_stats["slo_attainment"]
+                   / max(base_stats["slo_attainment"], 1e-12))
+    goodput_speedup = (hand_stats["goodput_tok_s"]
+                       / max(base_stats["goodput_tok_s"], 1e-12))
+    if hand_stats["slo_attainment"] <= base_stats["slo_attainment"]:
+        raise AssertionError(
+            f"fault handling must beat the no-handling baseline on SLO "
+            f"attainment: {hand_stats['slo_attainment']:.3f} vs "
+            f"{base_stats['slo_attainment']:.3f}")
+    if hand_stats["goodput_tok_s"] <= base_stats["goodput_tok_s"]:
+        raise AssertionError(
+            f"fault handling must beat the no-handling baseline on "
+            f"goodput: {hand_stats['goodput_tok_s']:.1f} vs "
+            f"{base_stats['goodput_tok_s']:.1f} tok/s")
+
+    incidents = log.timeline()
+    RESULTS.update({
+        "n_requests": N_REQUESTS,
+        "drop_window_steps": [DROP_START, DROP_STOP],
+        "deadline_steps": DEADLINE_STEPS,
+        "chaos_goodput_tok_s": hand_stats["goodput_tok_s"],
+        "baseline_goodput_tok_s": base_stats["goodput_tok_s"],
+        "chaos_goodput_speedup": goodput_speedup,
+        "slo_attainment_speedup": slo_speedup,
+        "chaos_slo_attainment": hand_stats["slo_attainment"],
+        "baseline_slo_attainment": base_stats["slo_attainment"],
+        "completed": hand_stats["completed"],
+        "shed": hand_stats["shed"],
+        "timed_out": hand_stats["timed_out"],
+        "baseline_timed_out": base_stats["timed_out"],
+        "reships": hand_stats["reships"],
+        "reroutes": hand_stats["reroutes"],
+        "incident_rows": len(incidents),
+    })
+
+    rows = [
+        "| scheduler | SLO attainment | goodput tok/s | completed "
+        "| timed out | shed |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, s in (("fault handling (shed + reship/reroute)", hand_stats),
+                    ("no handling (wait-out, no shed)", base_stats)):
+        rows.append(
+            f"| {name} | {s['slo_attainment']:.3f} "
+            f"| {s['goodput_tok_s']:.1f} | {s['completed']} "
+            f"| {s['timed_out']} | {s['shed']} |")
+    rows.append("")
+    rows.append(
+        f"Light path down for steps [{DROP_START}, {DROP_STOP}); "
+        f"{hand_stats['reships']} reships, {hand_stats['reroutes']} "
+        f"reroutes, {len(incidents)} incident rows.  SLO attainment "
+        f"{slo_speedup:.2f}x and goodput {goodput_speedup:.2f}x over the "
+        f"no-handling baseline (both asserted > 1x).")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(run())

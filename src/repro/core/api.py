@@ -188,7 +188,11 @@ class MPW:
     # -- serving (beyond the C API; the paper's client-server claim) ---------
     def Serve(self, pid: int, *, max_slots: int, queue_limit: int = 64,
               prefill_steps=1, step_s: float = 1e-2, kv_bytes=0,
-              ship_steps=None):
+              ship_steps=None, deadline_steps=None, shed: bool = True,
+              topo=None, prefill_site: Optional[str] = None,
+              decode_site: Optional[str] = None, membership=None,
+              retry=None, max_reships: int = 2,
+              ship_timeout_s: float = 0.5, log=None):
         """Attach a continuous-batching serving scheduler to a path.
 
         The path is the WAN leg prefilled KV caches cross in a
@@ -200,10 +204,38 @@ class MPW:
         Returns the :class:`~repro.core.serving.ContinuousBatcher`;
         calling again replaces it.  The runtime engine
         (`repro.runtime.serving.ServingEngine`) drives the same scheduler
-        with real prefill/ship/decode work."""
-        from repro.core.serving import ContinuousBatcher, modeled_ship_steps
+        with real prefill/ship/decode work.
+
+        Fault tolerance: `deadline_steps` (+ `shed`) turns on per-request
+        SLOs with load shedding.  With `topo` + `prefill_site` +
+        `decode_site`, KV ships run through a
+        :class:`~repro.core.serving.FaultAwareShipper` — the topology's
+        `LinkProfile` fault schedules apply, failed ships retry through
+        `retry` (:data:`~repro.core.retry.KVSHIP_RETRY` by default) and
+        reroute after `max_reships` — and a `membership` (defaults to the
+        session's, from :meth:`Membership`) fails the serving roles over
+        off evicted sites.  Incidents land in `log` (defaults to the
+        session incident log, so they show in :meth:`Report`)."""
+        from repro.core.chaos import get_incident_log
+        from repro.core.serving import (ContinuousBatcher, FaultAwareShipper,
+                                        modeled_ship_steps)
         st = self.paths[pid]
         path = st.path
+        if log is None:
+            log = get_incident_log()
+        if membership is None and topo is not None:
+            membership = self.membership
+        shipper = None
+        if topo is not None:
+            if not (prefill_site and decode_site):
+                raise ValueError(
+                    f"Serve with topo needs prefill_site and decode_site, "
+                    f"got prefill_site={prefill_site!r} "
+                    f"decode_site={decode_site!r}")
+            shipper = FaultAwareShipper(
+                topo, prefill_site, decode_site, kv_bytes=kv_bytes,
+                step_s=step_s, retry=retry, max_reships=max_reships,
+                timeout_s=ship_timeout_s, log=log, name=path.key)
         if ship_steps is not None:
             ship = ship_steps
         elif callable(kv_bytes):
@@ -214,24 +246,32 @@ class MPW:
             ship = 0
         st.batcher = ContinuousBatcher(
             max_slots, queue_limit, prefill_steps=prefill_steps,
-            ship_steps=ship, step_s=step_s, name=path.key)
+            ship_steps=ship, step_s=step_s, name=path.key,
+            deadline_steps=deadline_steps, shed=shed, shipper=shipper,
+            log=log, membership=membership, prefill_site=prefill_site,
+            decode_site=decode_site)
         return st.batcher
 
-    def Admit(self, pid: int, prompt_len: int, max_new: int) -> Optional[int]:
+    def Admit(self, pid: int, prompt_len: int, max_new: int,
+              deadline_steps: Optional[int] = None) -> Optional[int]:
         """Admission control: submit one request to the path's serving
-        scheduler.  Returns the request id, or None when the queue is full
-        (the request is rejected, not parked)."""
+        scheduler.  Returns the request id, or None when the request is
+        rejected (queue full) or shed (its modeled completion under
+        current link health already blows `deadline_steps`)."""
         st = self.paths[pid]
         if st.batcher is None:
             raise ValueError(f"path {pid} has no serving scheduler — call "
                              f"Serve(pid={pid}, ...) first")
-        return st.batcher.submit(prompt_len, max_new)
+        return st.batcher.submit(prompt_len, max_new,
+                                 deadline_steps=deadline_steps)
 
     def ServeStats(self, pid: int, drain: bool = True) -> dict:
-        """Serving stats for a path's scheduler: completion/rejection
-        counts, latency and TTFT percentiles, goodput (modeled seconds),
-        plus the deterministic event `timeline`.  `drain=True` first steps
-        the virtual clock until every admitted request is terminal."""
+        """Serving stats for a path's scheduler: completion/rejection/
+        timeout/shed counts, reship/reroute/failover counters and the
+        `degraded` flag, SLO attainment, latency and TTFT percentiles,
+        goodput (modeled seconds), plus the deterministic event
+        `timeline`.  `drain=True` first steps the virtual clock until
+        every admitted request is terminal."""
         st = self.paths[pid]
         if st.batcher is None:
             raise ValueError(f"path {pid} has no serving scheduler — call "

@@ -81,6 +81,18 @@ class IncidentLog:
       * ``leave``    — a site left gracefully (drained, not evicted)
       * ``resize``   — the trainer re-formed its world on an epoch change
       * ``catchup``  — a rejoining site restored state from the replica
+      * ``timeout``  — a serving request blew its ``deadline_steps`` and was
+                       terminated (``core/serving.py``)
+      * ``shed``     — admission control rejected a request (queue full, or
+                       the modeled completion already blows the deadline)
+      * ``reship``   — a KV ship failed on a faulted hop and is being
+                       retried on the same route after a seeded backoff
+      * ``reroute``  — KV shipping exhausted ``max_reships`` and replanned
+                       over the topology's surviving links
+      * ``serve_failover`` — the batcher moved its prefill/decode role off
+                       an evicted site; in-flight requests drained to QUEUED
+      * ``degrade``  — no cross-site route survives: the serving tier fell
+                       back to collocated mono-site serving
 
     Storage is a capped ring buffer *per kind*: the first `keep_first` and
     last `keep_last` events of each kind are retained, the middle is
@@ -92,7 +104,9 @@ class IncidentLog:
     """
 
     KINDS = ("inject", "detect", "replan", "retune", "requeue", "failover",
-             "recover", "evict", "join", "leave", "resize", "catchup")
+             "recover", "evict", "join", "leave", "resize", "catchup",
+             "timeout", "shed", "reship", "reroute", "serve_failover",
+             "degrade")
 
     def __init__(self, keep_first: int = 64, keep_last: int = 64) -> None:
         self._lock = threading.Lock()

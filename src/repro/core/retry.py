@@ -127,3 +127,9 @@ class RetryState:
 # monitor lets the lease clock run out
 PROBE_RETRY = RetryPolicy(max_attempts=3, base_s=0.1, multiplier=2.0,
                           max_s=2.0, jitter=0.5)
+
+# KV-cache ships race a request deadline, so the backoff ladder is shorter
+# and tighter than the probe default: fail fast toward the reroute path
+# (`max_reships` in core/serving.py) instead of waiting out a dead link
+KVSHIP_RETRY = RetryPolicy(max_attempts=4, base_s=0.05, multiplier=2.0,
+                           max_s=1.0, jitter=0.5)

@@ -71,6 +71,8 @@ class PathTelemetry:
     samples: deque = field(default_factory=deque)   # (step, seconds, bytes)
     retunes: list = field(default_factory=list)     # (step, {knob: value})
     checksum_errors: int = 0      # per-hop CRC failures (chaos signal)
+    reships: int = 0              # KV ship retries on the same route
+    reroutes: int = 0             # KV ships replanned over backup links
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def note_plan(self, **kw) -> None:
@@ -92,6 +94,13 @@ class PathTelemetry:
         shows up as throughput collapse)."""
         with self._lock:
             self.checksum_errors += int(n)
+
+    def note_ship_retry(self, reships: int = 0, reroutes: int = 0) -> None:
+        """Count KV-ship fault responses (core/serving.py): retries of a
+        failed hop on the same route and reroutes over backup links."""
+        with self._lock:
+            self.reships += int(reships)
+            self.reroutes += int(reroutes)
 
     def record(self, seconds: float, nbytes: Optional[int] = None,
                step: Optional[int] = None) -> None:
@@ -136,6 +145,8 @@ class PathTelemetry:
                 "total_seconds": self.total_seconds,
                 "retunes": list(self.retunes),
                 "checksum_errors": self.checksum_errors,
+                "reships": self.reships,
+                "reroutes": self.reroutes,
             }
             plan = self.plan
             exposed, overlapped = self.exposed_s, self.overlapped_s
@@ -277,3 +288,7 @@ def record(key: str, seconds: float, nbytes: Optional[int] = None,
 
 def note_checksum_error(key: str, n: int = 1) -> None:
     _GLOBAL.path(key).note_checksum_error(n)
+
+
+def note_ship_retry(key: str, reships: int = 0, reroutes: int = 0) -> None:
+    _GLOBAL.path(key).note_ship_retry(reships=reships, reroutes=reroutes)

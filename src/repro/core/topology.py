@@ -351,8 +351,14 @@ class Topology:
         raise KeyError(f"pod {pod} belongs to no site")
 
     # -- route planning ------------------------------------------------------
-    def route(self, src: str, dst: str, metric: str = "latency") -> Route:
-        """Plan a route src -> dst; raises KeyError when disconnected."""
+    def route(self, src: str, dst: str, metric: str = "latency",
+              avoid: frozenset = frozenset()) -> Route:
+        """Plan a route src -> dst; raises KeyError when disconnected.
+
+        ``avoid`` holds extra directed ``(a, b)`` pairs treated as down for
+        this search only — callers (e.g. the serving tier's reroute path)
+        can steer around a faulted hop without mutating the topology.
+        """
         if metric not in ("hops", "latency", "width"):
             raise ValueError(f"unknown metric {metric!r}")
         for n in (src, dst):
@@ -362,7 +368,7 @@ class Topology:
             # a 0-hop Route would silently degrade (WidePath.hops=() means
             # "implicit single hop", i.e. a real ring shift, not a no-op)
             raise ValueError(f"route {src} -> {dst}: src and dst coincide")
-        prev = self._search(src, dst, metric)
+        prev = self._search(src, dst, metric, avoid)
         if dst not in prev:
             raise KeyError(f"no route {src} -> {dst}")
         names = [dst]
@@ -375,7 +381,8 @@ class Topology:
             shifts.append(self._sites[b].gateway - self._sites[a].gateway)
         return Route(tuple(names), tuple(profiles), tuple(shifts))
 
-    def _search(self, src: str, dst: str, metric: str) -> dict:
+    def _search(self, src: str, dst: str, metric: str,
+                avoid: frozenset = frozenset()) -> dict:
         # Dijkstra over (cost, site); "hops" degenerates to BFS via unit cost
         def edge_cost(prof: LinkProfile) -> float:
             if metric == "hops":
@@ -400,7 +407,7 @@ class Topology:
             if u == dst:
                 break
             for (a, b), prof in self._links.items():
-                if a != u or (a, b) in self._down:
+                if a != u or (a, b) in self._down or (a, b) in avoid:
                     continue
                 c = merge(cost, prof)
                 if c < best.get(b, float("inf")):

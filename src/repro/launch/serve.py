@@ -22,10 +22,31 @@ from repro.runtime import Server, ServingEngine
 
 def _run_engine(rc, mesh, args) -> None:
     path = None
+    route = topo = log = None
     if args.engine == "disagg":
-        path = WidePath(axis="pod", comm=CommConfig(streams=args.streams),
-                        link=WAN_LONDON_POZNAN, name="kvship")
-    eng = ServingEngine(rc, mesh, mode=args.engine, path=path)
+        if args.chaos_drop is not None:
+            # CosmoGrid testbed with the backup detour; the primary
+            # amsterdam->tokyo light path drops for the scheduled window
+            from repro.core.chaos import IncidentLog
+            from repro.core.topology import Fault, cosmogrid_topology
+            topo = cosmogrid_topology(backup_links=True)
+            start, stop = args.chaos_drop
+            prof = topo.link("amsterdam", "tokyo").with_fault(
+                Fault("drop", start=start, stop=stop))
+            topo.connect("amsterdam", "tokyo", prof)
+            route = topo.route("amsterdam", "tokyo")
+            log = IncidentLog()
+            path = WidePath(axis="pod",
+                            comm=CommConfig(streams=args.streams),
+                            hops=route.as_hops(), name="kvship")
+        else:
+            path = WidePath(axis="pod", comm=CommConfig(streams=args.streams),
+                            link=WAN_LONDON_POZNAN, name="kvship")
+    eng = ServingEngine(rc, mesh, mode=args.engine, path=path,
+                        route=route, topo=topo, log=log, ship_timeout_s=0.5,
+                        deadline_steps=args.deadline_steps,
+                        prefill_site="amsterdam" if topo else None,
+                        decode_site="tokyo" if topo else None)
     rng = np.random.default_rng(args.seed)
     S = rc.shape.seq_len
     for _ in range(args.requests):
@@ -43,6 +64,15 @@ def _run_engine(rc, mesh, args) -> None:
           f"p99={stats['latency_p99_s']*1e3:.1f}ms "
           f"ttft_p50={stats['ttft_p50_s']*1e3:.1f}ms "
           f"goodput={stats['goodput_tok_s']:.1f} tok/s")
+    if args.deadline_steps or args.chaos_drop is not None:
+        print(f"[serve] slo: attainment={stats['slo_attainment']:.3f} "
+              f"timed_out={stats['timed_out']} shed={stats['shed']} "
+              f"reships={stats['reships']} reroutes={stats['reroutes']} "
+              f"degraded={stats['degraded']}")
+    if log is not None:
+        for row in log.timeline():
+            print(f"[serve] incident: step={row['step']} "
+                  f"{row['event']} {row['subject']} {row['detail']}")
 
 
 def main():
@@ -60,6 +90,15 @@ def main():
                     help="seeded request count for --engine mono/disagg")
     ap.add_argument("--streams", type=int, default=16,
                     help="WAN streams for the disaggregated KV ship")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request SLO in virtual steps (requests past "
+                         "it TIMEOUT; admission sheds hopeless ones)")
+    ap.add_argument("--chaos-drop", type=int, nargs=2, default=None,
+                    metavar=("START", "STOP"),
+                    help="disagg only: run on the CosmoGrid testbed and "
+                         "drop the amsterdam->tokyo light path for steps "
+                         "[START, STOP) — ships reship/reroute and the "
+                         "incident timeline prints at the end")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")

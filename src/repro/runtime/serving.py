@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
-from repro.core.kvship import KVShipPlan, plan_kv_ship, ship_kv
+from repro.core.kvship import KVShipPlan, ShipError, plan_kv_ship, ship_kv
 from repro.core.path import WidePath
 from repro.core.serving import ContinuousBatcher
 from repro.runtime.serve_loop import Server
@@ -45,11 +45,26 @@ class ServingEngine:
     mode: ``"mono"`` (prefill feeds decode in-memory) or ``"disagg"``
         (prefill KV is shipped over `path` before decode may start).
     path: the WAN `WidePath` KV caches cross when ``mode="disagg"``.
+    route / topo: the :class:`~repro.core.topology.Route` the path was
+        compiled from plus its topology — with these, each real KV ship
+        runs under the route's `LinkProfile` fault schedules (reship on a
+        failed hop through `retry`, reroute over `topo` after
+        `max_reships`); a :class:`~repro.core.kvship.ShipError` (no route
+        left) degrades the engine to in-memory KV handoff (collocated
+        mono fallback, ``stats()["degraded"]``).
+    deadline_steps / membership / prefill_site / decode_site / log: passed
+        to the batcher — per-request SLOs with shedding, serve failover
+        off evicted sites, incidents into `log`.
     """
 
     def __init__(self, rc: RunConfig, mesh, *, mode: str = "mono",
                  path: Optional[WidePath] = None, params=None, seed: int = 0,
-                 queue_limit: int = 64, step_s: float = 1e-2):
+                 queue_limit: int = 64, step_s: float = 1e-2,
+                 route=None, topo=None, retry=None, max_reships: int = 2,
+                 ship_timeout_s: float = 30.0, deadline_steps=None,
+                 shed: bool = True, membership=None,
+                 prefill_site: Optional[str] = None,
+                 decode_site: Optional[str] = None, log=None):
         if mode not in ("mono", "disagg"):
             raise ValueError(f"mode must be 'mono' or 'disagg', got {mode!r}")
         if mode == "disagg" and path is None:
@@ -62,13 +77,22 @@ class ServingEngine:
         self.rc = rc
         self.mode = mode
         self.path = path
+        self.route = route
+        self.topo = topo
+        self.retry = retry
+        self.max_reships = int(max_reships)
+        self.ship_timeout_s = float(ship_timeout_s)
+        self.log = log
+        self._degraded = False
         self.server = Server(rc, mesh, params=params, seed=seed)
         self.model = self.server.bundle.model
         self.max_slots = rc.shape.global_batch
         self.max_len = rc.shape.seq_len
         self.batcher = ContinuousBatcher(
             self.max_slots, queue_limit, prefill_steps=1, ship_steps=0,
-            step_s=step_s)
+            step_s=step_s, deadline_steps=deadline_steps, shed=shed,
+            log=log, membership=membership, prefill_site=prefill_site,
+            decode_site=decode_site)
         self.cache = self.server.init_cache()
         self._pos = np.zeros(self.max_slots, np.int32)
         self._tok = np.zeros((self.max_slots, 1), np.int32)
@@ -82,8 +106,10 @@ class ServingEngine:
             lambda p, toks: self.model.prefill(p, {"tokens": toks}))
 
     # -- request intake -----------------------------------------------------
-    def submit(self, prompt_tokens: np.ndarray, max_new: int) -> Optional[int]:
-        """Admit one request (or None when admission control rejects it)."""
+    def submit(self, prompt_tokens: np.ndarray, max_new: int,
+               deadline_steps: Optional[int] = None) -> Optional[int]:
+        """Admit one request (or None when admission control rejects or
+        sheds it)."""
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         S_p = prompt.shape[0]
         w = self.rc.model.sliding_window
@@ -91,7 +117,7 @@ class ServingEngine:
             raise ValueError(
                 f"prompt_len={S_p} + max_new={max_new} exceeds the decode "
                 f"cache (max_len={self.max_len}, window={w})")
-        rid = self.batcher.submit(S_p, max_new)
+        rid = self.batcher.submit(S_p, max_new, deadline_steps=deadline_steps)
         if rid is not None:
             self._prompts[rid] = prompt
         return rid
@@ -112,6 +138,12 @@ class ServingEngine:
                 self._on_decode_start(rid)
             elif kind == "complete":
                 self._on_complete(rid)
+            elif kind == "timeout":
+                self._on_abort(rid, keep_prompt=False)
+            elif kind == "requeue":
+                self._on_abort(rid, keep_prompt=True)
+            elif kind in ("shed", "reject"):
+                self._prompts.pop(rid, None)
         return len(events)
 
     def run_to_completion(self, max_steps: int = 100_000) -> dict:
@@ -147,12 +179,24 @@ class ServingEngine:
         S_p = prompt.shape[0]
         logits, pcache = self._prefill_fn(self.server.params, prompt[None, :])
         kv = {n: np.asarray(pcache[n][:, 0]) for n in ("k", "v")}
-        if self.mode == "disagg":
+        if self.mode == "disagg" and not self._degraded:
             geom = tuple(sorted((n, tuple(a.shape)) for n, a in kv.items()))
             if geom not in self._ship_plans:
                 self._ship_plans[geom] = plan_kv_ship(kv, self.path)
-            kv, _ = ship_kv(kv, self._ship_plans[geom], rid,
-                            step=self.batcher.now())
+            try:
+                kv, res = ship_kv(kv, self._ship_plans[geom], rid,
+                                  step=self.batcher.now(), route=self.route,
+                                  retry=self.retry,
+                                  max_reships=self.max_reships,
+                                  topo=self.topo, log=self.log,
+                                  timeout_s=self.ship_timeout_s)
+                self.batcher.note_ship(rid, reships=res.reships,
+                                       reroutes=res.reroutes)
+            except ShipError as e:
+                # no surviving route: hand the KV over in memory from here
+                # on (collocated mono fallback) and flag it
+                self._degraded = True
+                self.batcher.degrade(reason=str(e))
         cache = dict(self.cache)
         for n, leaf in kv.items():
             cache[n] = self.cache[n].at[:, slot, :S_p].set(
@@ -173,3 +217,18 @@ class ServingEngine:
         if slot is not None:
             del self._decoding[slot]
         self.results[rid] = np.asarray(self._outputs.pop(rid), np.int64)
+
+    def _on_abort(self, rid: int, *, keep_prompt: bool) -> None:
+        """A request left the pipeline without completing: `timeout` drops
+        it for good, `requeue` (serve failover) keeps the prompt so the
+        re-queued request prefills again from scratch."""
+        slot = None
+        for s, r in self._decoding.items():
+            if r == rid:
+                slot = s
+                break
+        if slot is not None:
+            del self._decoding[slot]
+        self._outputs.pop(rid, None)
+        if not keep_prompt:
+            self._prompts.pop(rid, None)

@@ -236,6 +236,34 @@ def test_r4_checks_tel_key_kwarg():
     assert any(f.rule == "R4" for f in run_rule("R4", src))
 
 
+def test_r4_fires_on_misspelled_incident_kind():
+    src = 'def f(log, step, rid):\n    log.add(step, "resheep", f"req{rid}")\n'
+    found = run_rule("R4", src)
+    assert any("resheep" in f.message for f in found)
+
+
+def test_r4_silent_on_vocabulary_incident_kinds():
+    src = """
+        def f(log, step, rid):
+            log.add(step, "reship", f"req{rid}")
+            log.add(step, "reroute", f"req{rid}")
+            log.add(step, "serve_failover", "decode:a->b")
+            log.add(step, "degrade", "serve")
+            log.add(step, "timeout", f"req{rid}")
+            log.add(step, "shed", f"req{rid}")
+    """
+    assert run_rule("R4", src) == []
+
+
+def test_r4_ignores_set_add_and_dynamic_kinds():
+    src = """
+        def f(log, seen, step, kind, rid):
+            seen.add(rid)
+            log.add(step, kind, f"req{rid}")
+    """
+    assert run_rule("R4", src) == []
+
+
 def test_r4_mpw_verb_audit_fires_on_undocumented_verb(tmp_path):
     (tmp_path / "src/repro/core").mkdir(parents=True)
     (tmp_path / "docs").mkdir()

@@ -309,3 +309,93 @@ def test_scheduler_admission_bounded_by_queue_limit(n, queue_limit):
     assert b.stats()["rejected"] == n - len(admitted)
     b.drain()
     assert b.stats()["completed"] == len(admitted)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant serving invariants (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+from repro.core.serving import (FaultAwareShipper, Request, SHED,  # noqa: E402
+                                TIMEOUT, _TERMINAL)
+from repro.core.topology import Fault, cosmogrid_topology  # noqa: E402
+
+
+def _deadline_trace(seed: int, n: int) -> list:
+    rng = np.random.default_rng(seed)
+    steps = np.cumsum(rng.integers(0, 4, size=n))
+    return [(int(s), int(rng.integers(1, 64)), int(rng.integers(1, 12)),
+             int(rng.integers(2, 40)))
+            for s in steps]
+
+
+@given(seed=st.integers(0, 40), max_slots=st.sampled_from([1, 2, 4]),
+       shed=st.sampled_from([True, False]))
+def test_serving_deadline_never_exceeded(seed, max_slots, shed):
+    """Every DONE request finished strictly inside its deadline; every
+    TIMEOUT fired at exactly arrival + deadline (never later)."""
+    b = ContinuousBatcher(max_slots, 16, prefill_steps=2, ship_steps=3,
+                          shed=shed)
+    trace = _deadline_trace(seed, 20)
+    i = 0
+    while i < len(trace) or b.active() > 0:
+        now = b.now()
+        while i < len(trace) and trace[i][0] <= now:
+            s, p, m, d = trace[i]
+            b.submit(p, m, step=now, deadline_steps=d)
+            i += 1
+        b.step_once()
+    for tr in b._reqs.values():
+        assert tr.state in _TERMINAL
+        d = tr.req.deadline_steps
+        if tr.state == DONE:
+            assert tr.t_done - tr.req.arrival < d
+        elif tr.state == TIMEOUT:
+            assert tr.t_done == tr.req.arrival + d
+
+
+@given(seed=st.integers(0, 40), max_slots=st.sampled_from([1, 2]))
+def test_serving_terminal_requests_never_occupy_slots(seed, max_slots):
+    """After a request sheds or times out, it never holds a decode slot and
+    never emits another timeline event."""
+    b = ContinuousBatcher(max_slots, 16, prefill_steps=2, ship_steps=4)
+    trace = _deadline_trace(seed, 16)
+    terminal_at: dict[int, int] = {}
+    i = 0
+    while i < len(trace) or b.active() > 0:
+        now = b.now()
+        while i < len(trace) and trace[i][0] <= now:
+            s, p, m, d = trace[i]
+            b.submit(p, m, step=now, deadline_steps=d)
+            i += 1
+        b.step_once()
+        for rid, tr in b._reqs.items():
+            if tr.state in (SHED, TIMEOUT) and rid not in terminal_at:
+                terminal_at[rid] = tr.t_done
+            if tr.state in (SHED, TIMEOUT):
+                assert rid not in b.active_slots()
+    for kind, tag, step in b.timeline():
+        rid = int(tag[3:])
+        if rid in terminal_at:
+            assert step <= terminal_at[rid], \
+                f"req{rid} emitted {kind!r}@{step} after terminal " \
+                f"at {terminal_at[rid]}"
+
+
+@given(seed=st.integers(0, 20), start=st.sampled_from([2, 5, 9]))
+def test_serving_reship_schedule_deterministic(seed, start):
+    """Two same-seed FaultAwareShipper runs produce identical ShipOutcomes
+    (steps, reships, reroutes, event rows) for the same request stream."""
+    def outcomes():
+        topo = cosmogrid_topology(backup_links=True)
+        topo.connect("amsterdam", "tokyo",
+                     topo.link("amsterdam", "tokyo").with_fault(
+                         Fault("drop", start=start, stop=start + 30)))
+        sh = FaultAwareShipper(topo, "amsterdam", "tokyo",
+                               kv_bytes=16 << 20, step_s=0.5, max_reships=2,
+                               timeout_s=0.5, seed=seed)
+        outs = []
+        for rid, at in enumerate(range(0, 40, 4)):
+            sh.on_step(at)
+            outs.append(sh.ship(Request(rid, at, 8, 2), at))
+        return outs
+    assert outcomes() == outcomes()

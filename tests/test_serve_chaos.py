@@ -1,0 +1,367 @@
+"""Fault-tolerant serving acceptance suite (ISSUE 10).
+
+1. Golden serve-chaos timeline: the amsterdam->tokyo light path drops
+   mid-ship on the CosmoGrid testbed; the KV ship reships, reroutes over the
+   tokyo-edinburgh backup, and the route recovers when the fault clears.
+   Both the batcher event timeline and the incident timeline are pinned and
+   must replay **bit-identically** across two runs (CI runs this file
+   twice).
+2. Deadlines: in-flight requests past ``deadline_steps`` reach the terminal
+   TIMEOUT state at exactly ``arrival + deadline`` and free their slot.
+3. SLO-aware admission: hopeless requests shed at submit; queue-full
+   rejections land a ``shed`` incident too.
+4. Decode-site failover: a `SiteMembership` eviction drains in-flight
+   requests back to QUEUED and re-plans onto a surviving site; with no
+   surviving pair the batcher degrades to collocated mono-site serving.
+5. The `modeled_ship_steps` fault-clock regression (satellite): a degraded
+   or dead hop lengthens the modeled ship only when the step lands in the
+   fault window.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.chaos import IncidentLog
+from repro.core.membership import SiteMembership
+from repro.core.serving import (DONE, SHED, TIMEOUT, ContinuousBatcher,
+                                FaultAwareShipper, modeled_ship_steps)
+from repro.core.topology import Fault, cosmogrid_topology
+
+STEP_S = 0.5          # coarse decode step so the slow backup link fits
+KV_BYTES = 16 << 20
+
+# the pinned scenario: primary light path drops for steps [4, 60) while
+# req0's KV is on the wire; req2 carries a hopeless 10-step deadline; req3
+# arrives after the fault clears and ships over the healed primary
+GOLDEN_TRACE = [(0, 8, 3), (1, 8, 2), (20, 8, 2, 10), (65, 8, 2)]
+
+GOLDEN_TIMELINE = [
+    ["admit", "req0", 0], ["prefill", "req0", 0], ["admit", "req1", 1],
+    ["ship", "req0", 2], ["prefill", "req1", 2], ["ship", "req1", 4],
+    ["shed", "req2", 20], ["decode", "req1", 53], ["complete", "req1", 54],
+    ["decode", "req0", 55], ["complete", "req0", 57],
+    ["admit", "req3", 65], ["prefill", "req3", 65], ["ship", "req3", 67],
+    ["decode", "req3", 70], ["complete", "req3", 71],
+]
+
+# incident rows in arrival order (reship/reroute are logged when req0's
+# ship runs at step 2, so they precede the inject row the step-4
+# housekeeping pass writes)
+GOLDEN_INCIDENTS = [
+    {"step": 5, "event": "reship", "subject": "amsterdam->tokyo",
+     "detail": {"rid": 0, "attempt": 1, "backoff_s": 0.0}},
+    {"step": 6, "event": "reroute", "subject": "amsterdam->tokyo",
+     "detail": {"rid": 0, "route": ["amsterdam", "edinburgh", "tokyo"]}},
+    {"step": 4, "event": "inject", "subject": "ams-tokyo-lightpath",
+     "detail": {"kind": "drop", "start": 4, "stop": 60, "factor": 1.0,
+                "error_rate": 0.0}},
+    {"step": 20, "event": "shed", "subject": "req2",
+     "detail": {"reason": "slo", "modeled_steps": 52, "deadline_steps": 10}},
+    {"step": 60, "event": "recover", "subject": "amsterdam->tokyo",
+     "detail": {"mode": "reroute", "latency_steps": 56}},
+]
+
+
+def _chaos_setup(max_reships: int = 1):
+    topo = cosmogrid_topology(backup_links=True)
+    prof = topo.link("amsterdam", "tokyo").with_fault(
+        Fault("drop", start=4, stop=60))
+    topo.connect("amsterdam", "tokyo", prof)
+    log = IncidentLog()
+    shipper = FaultAwareShipper(
+        topo, "amsterdam", "tokyo", kv_bytes=KV_BYTES, step_s=STEP_S,
+        max_reships=max_reships, timeout_s=STEP_S, log=log, seed=0)
+    batcher = ContinuousBatcher(
+        2, 8, prefill_steps=2, step_s=STEP_S, deadline_steps=200,
+        shipper=shipper, log=log, prefill_site="amsterdam",
+        decode_site="tokyo")
+    return topo, log, shipper, batcher
+
+
+def _run_chaos():
+    topo, log, shipper, batcher = _chaos_setup()
+    stats = batcher.run(GOLDEN_TRACE)
+    return batcher.timeline(), log.timeline(), stats, shipper
+
+
+# ---------------------------------------------------------------------------
+# golden serve-chaos timeline
+# ---------------------------------------------------------------------------
+
+def test_golden_chaos_timeline():
+    timeline, incidents, stats, shipper = _run_chaos()
+    assert timeline == GOLDEN_TIMELINE
+    assert incidents == GOLDEN_INCIDENTS
+    assert stats["completed"] == 3
+    assert stats["shed"] == 1
+    assert stats["timed_out"] == 0
+    assert stats["reships"] == 1
+    assert stats["reroutes"] == 1
+    assert stats["degraded"] is False
+    assert stats["slo_attainment"] == pytest.approx(0.75)
+    # the fault cleared: the shipper is back on the primary light path
+    assert shipper.route_names == ("amsterdam", "tokyo")
+    assert not shipper.detoured
+
+
+def test_golden_chaos_timeline_replays_bit_identically():
+    a = _run_chaos()
+    b = _run_chaos()
+    assert a[0] == b[0]           # batcher event timeline
+    assert a[1] == b[1]           # incident timeline
+    assert a[2] == b[2]           # stats dict
+
+
+def test_ship_telemetry_counts_reships():
+    from repro.core.telemetry import get_telemetry
+    tel = get_telemetry()
+    tel.reset("serve/req0/kv")
+    _run_chaos()
+    row = tel.path("serve/req0/kv").summary()
+    assert row["reships"] == 1
+    assert row["reroutes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines -> TIMEOUT
+# ---------------------------------------------------------------------------
+
+def test_deadline_times_out_inflight_request():
+    # shed=False forces the hopeless request into the pipeline so the sweep
+    # (not admission) has to kill it
+    b = ContinuousBatcher(1, 8, prefill_steps=1, ship_steps=50,
+                          shed=False, log=IncidentLog())
+    rid = b.submit(8, 4, step=0, deadline_steps=10)
+    assert rid == 0
+    b.drain()
+    tr = b._reqs[rid]
+    assert tr.state == TIMEOUT
+    assert tr.t_done == 10                      # exactly arrival + deadline
+    assert b.active_slots() == [None]           # the slot was freed
+    assert b.stats()["timed_out"] == 1
+    assert ["timeout", "req0", 10] in b.timeline()
+
+
+def test_timeout_frees_slot_for_later_requests():
+    b = ContinuousBatcher(1, 8, prefill_steps=1, ship_steps=30, shed=False)
+    b.submit(8, 2, step=0, deadline_steps=5)    # will time out mid-ship
+    for _ in range(6):
+        b.step_once()
+    rid2 = b.submit(8, 2, step=b.now())         # no deadline: must complete
+    assert rid2 is not None
+    b.drain()
+    assert b._reqs[rid2].state == DONE
+    stats = b.stats()
+    assert stats["timed_out"] == 1 and stats["completed"] == 1
+
+
+def test_timeout_incident_records_stage():
+    log = IncidentLog()
+    b = ContinuousBatcher(1, 8, prefill_steps=1, ship_steps=50,
+                          shed=False, log=log)
+    b.submit(8, 4, step=0, deadline_steps=10)
+    b.drain()
+    rows = [r for r in log.timeline() if r["event"] == "timeout"]
+    assert rows == [{"step": 10, "event": "timeout", "subject": "req0",
+                     "detail": {"stage": "ship", "tokens": 0}}]
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission -> SHED
+# ---------------------------------------------------------------------------
+
+def test_slo_admission_sheds_hopeless_request():
+    log = IncidentLog()
+    b = ContinuousBatcher(1, 8, prefill_steps=1, ship_steps=50, log=log)
+    rid = b.submit(8, 4, step=0, deadline_steps=10)
+    assert rid is None
+    assert b._reqs[0].state == SHED
+    assert b.stats()["shed"] == 1
+    assert b.stats()["slo_attainment"] == 0.0
+    row = [r for r in log.timeline() if r["event"] == "shed"][0]
+    assert row["detail"]["reason"] == "slo"
+    assert row["detail"]["modeled_steps"] >= row["detail"]["deadline_steps"]
+
+
+def test_feasible_deadline_is_admitted_and_met():
+    b = ContinuousBatcher(1, 8, prefill_steps=1, ship_steps=2)
+    rid = b.submit(8, 4, step=0, deadline_steps=50)
+    assert rid is not None
+    b.drain()
+    tr = b._reqs[rid]
+    assert tr.state == DONE
+    assert tr.t_done - tr.req.arrival < 50
+
+
+def test_queue_full_rejection_lands_shed_incident():
+    log = IncidentLog()
+    b = ContinuousBatcher(1, 1, prefill_steps=1, ship_steps=0, log=log)
+    b.submit(8, 2)
+    assert b.submit(8, 2) is None               # queue_limit=1: second rejects
+    assert b.stats()["rejected"] == 1
+    rows = [r for r in log.timeline() if r["event"] == "shed"]
+    assert rows and rows[0]["detail"]["reason"] == "queue-full"
+
+
+def test_shed_disabled_admits_hopeless_request():
+    b = ContinuousBatcher(1, 8, prefill_steps=1, ship_steps=50, shed=False)
+    assert b.submit(8, 4, step=0, deadline_steps=10) is not None
+
+
+# ---------------------------------------------------------------------------
+# decode-site failover and the degraded fallback
+# ---------------------------------------------------------------------------
+
+def _evict_tokyo_setup():
+    """Both links into tokyo drop at step 5: membership evicts it and the
+    decode role must move to a surviving site."""
+    topo = cosmogrid_topology(backup_links=True)
+    for a, b in [("amsterdam", "tokyo"), ("tokyo", "edinburgh")]:
+        topo.connect(a, b, topo.link(a, b).with_fault(
+            Fault("drop", start=5, stop=200)))
+    log = IncidentLog()
+    shipper = FaultAwareShipper(topo, "amsterdam", "tokyo",
+                                kv_bytes=4 << 20, step_s=STEP_S,
+                                max_reships=1, timeout_s=STEP_S, log=log)
+    ms = SiteMembership(topo, "amsterdam", lease_steps=3, log=log)
+    batcher = ContinuousBatcher(2, 8, prefill_steps=2, step_s=STEP_S,
+                                shipper=shipper, log=log, membership=ms,
+                                prefill_site="amsterdam", decode_site="tokyo")
+    return topo, log, shipper, batcher
+
+
+def test_decode_site_failover_on_eviction():
+    _, log, shipper, b = _evict_tokyo_setup()
+    stats = b.run([(0, 8, 3), (1, 8, 2), (30, 8, 2)])
+    assert stats["completed"] == 3
+    assert stats["failovers"] == 1
+    assert stats["degraded"] is False           # the new pair routes again
+    assert b._decode_site == "espoo"
+    assert shipper.route_names == ("amsterdam", "espoo")
+    events = [r["event"] for r in log.timeline()]
+    assert "evict" in events and "serve_failover" in events
+    fo = [r for r in log.timeline() if r["event"] == "serve_failover"][0]
+    assert fo["subject"] == "decode:tokyo->espoo"
+
+
+def test_failover_drains_inflight_to_queued():
+    _, log, _, b = _evict_tokyo_setup()
+    # max_new=40 keeps req0 decoding on tokyo when the eviction lands
+    stats = b.run([(0, 8, 40)])
+    assert stats["completed"] == 1
+    assert stats["failovers"] == 1
+    fo = [r for r in log.timeline() if r["event"] == "serve_failover"][0]
+    assert fo["detail"]["requeued"] == 1
+    tl = b.timeline()
+    assert ["requeue", "req0", 8] in tl
+    # decode restarted from scratch on the new site after the requeue
+    decode_steps = [e[2] for e in tl if e[0] == "decode"]
+    assert len(decode_steps) == 2 and decode_steps[1] > 8
+    assert b._reqs[0].tokens == 40
+
+
+def test_unroutable_ship_degrades_to_collocated():
+    topo = cosmogrid_topology()                 # no backup: tokyo is a leaf
+    topo.connect("amsterdam", "tokyo", topo.link("amsterdam", "tokyo")
+                 .with_fault(Fault("drop", start=3, stop=1 << 20)))
+    log = IncidentLog()
+    shipper = FaultAwareShipper(topo, "amsterdam", "tokyo",
+                                kv_bytes=4 << 20, step_s=STEP_S,
+                                max_reships=1, timeout_s=STEP_S, log=log)
+    b = ContinuousBatcher(2, 8, prefill_steps=2, step_s=STEP_S,
+                          shipper=shipper, log=log,
+                          prefill_site="amsterdam", decode_site="tokyo")
+    stats = b.run([(0, 8, 3), (4, 8, 2)])
+    assert stats["completed"] == 2              # collocated serving finishes
+    assert stats["degraded"] is True
+    rows = [r for r in log.timeline() if r["event"] == "degrade"]
+    assert rows == [{"step": 2, "event": "degrade", "subject": "serve",
+                     "detail": {"reason": "req0: no surviving route"}}]
+
+
+def test_degrade_hook_for_runtime_engines():
+    log = IncidentLog()
+    b = ContinuousBatcher(1, 8, ship_steps=5, log=log)
+    b.degrade(reason="real ship failed")
+    assert b.stats()["degraded"] is True
+    rid = b.submit(8, 2)
+    b.drain()
+    assert b._reqs[rid].state == DONE
+    # degraded ships are free: ship and decode land on the same step
+    tl = b.timeline()
+    ship_at = [e[2] for e in tl if e[0] == "ship"][0]
+    decode_at = [e[2] for e in tl if e[0] == "decode"][0]
+    assert ship_at == decode_at
+
+
+# ---------------------------------------------------------------------------
+# modeled_ship_steps fault clock (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_modeled_ship_steps_degraded_hop_lengthens_ship():
+    topo = cosmogrid_topology()
+    topo.connect("amsterdam", "tokyo", topo.link("amsterdam", "tokyo")
+                 .with_fault(Fault("degrade", start=10, stop=20, factor=0.005)))
+    route = topo.route("amsterdam", "tokyo")
+    healthy = modeled_ship_steps(KV_BYTES, step_s=STEP_S, step=0, route=route)
+    degraded = modeled_ship_steps(KV_BYTES, step_s=STEP_S, step=10,
+                                  route=route)
+    after = modeled_ship_steps(KV_BYTES, step_s=STEP_S, step=20, route=route)
+    assert degraded > healthy           # capacity below the window cap
+    assert after == healthy                     # the fault clock moved on
+
+
+def test_modeled_ship_steps_dead_hop_costs_the_watchdog():
+    topo = cosmogrid_topology()
+    topo.connect("amsterdam", "tokyo", topo.link("amsterdam", "tokyo")
+                 .with_fault(Fault("drop", start=5, stop=8)))
+    route = topo.route("amsterdam", "tokyo")
+    healthy = modeled_ship_steps(KV_BYTES, step_s=STEP_S, step=0, route=route)
+    dead = modeled_ship_steps(KV_BYTES, step_s=STEP_S, step=5, route=route,
+                              timeout_s=30.0)
+    assert dead == int(np.ceil(30.0 / STEP_S))  # the naive wait-out model
+    assert dead > healthy
+
+
+def test_modeled_ship_steps_requires_path_or_route():
+    with pytest.raises(ValueError, match="route"):
+        modeled_ship_steps(KV_BYTES, path=None, route=None)
+
+
+# ---------------------------------------------------------------------------
+# FaultAwareShipper determinism & estimates
+# ---------------------------------------------------------------------------
+
+def test_shipper_estimate_matches_ship_steps():
+    topo, log, shipper, _ = _chaos_setup()
+    from repro.core.serving import Request
+    req = Request(0, 2, 8, 3)
+    est = shipper.estimate_steps(req, 2)
+    out = shipper.ship(req, 2)
+    assert out.ok and out.steps == est
+
+
+def test_shipper_unroutable_estimate_blows_any_deadline():
+    topo = cosmogrid_topology()
+    topo.connect("amsterdam", "tokyo", topo.link("amsterdam", "tokyo")
+                 .with_fault(Fault("drop", start=0, stop=1 << 20)))
+    shipper = FaultAwareShipper(topo, "amsterdam", "tokyo",
+                                kv_bytes=4 << 20, step_s=STEP_S,
+                                max_reships=0, timeout_s=STEP_S)
+    from repro.core.serving import Request
+    assert shipper.estimate_steps(Request(0, 0, 8, 2), 0) >= 1 << 30
+
+
+def test_note_ship_accounts_real_ship_retries():
+    # runtime engines ship through kvship.ship_kv (the batcher runs with
+    # ship_steps=0) and feed the real KVShipResult back via note_ship —
+    # without it stats() would report 0 reships while the incident log
+    # fills up
+    b = ContinuousBatcher(2, 8, prefill_steps=1, ship_steps=0)
+    rid = b.submit(8, 2)
+    b.note_ship(rid, reships=2, reroutes=1)
+    b.note_ship(rid + 999, reships=1)        # unknown rid: counter-only
+    b.drain()
+    s = b.stats()
+    assert s["reships"] == 3 and s["reroutes"] == 1

@@ -304,8 +304,25 @@ def rule_r3(ctx: ModuleContext) -> list[Finding]:
 #   ckpt...              checkpoint paths (constant prefix)
 _KEY_TEMPLATES = {"{}", "{}/hop{}:{}", "{}/bkt{}", "{}/intra", "{}/wan",
                   "{}/delta", "serve/req{}/kv"}
-_TEL_CALLS = {"note_plan", "record", "timed", "note_checksum_error", "path"}
+_TEL_CALLS = {"note_plan", "record", "timed", "note_checksum_error", "path",
+              "note_ship_retry"}
 _TEL_KWARGS = {"tel_key", "tel_prefix"}
+
+# Incident-kind vocabulary for `IncidentLog.add(step, kind, ...)` call sites.
+# Sourced live from the library so the lint never drifts from the runtime
+# check; the literal fallback keeps the rule alive if the import breaks.
+_INCIDENT_KINDS_FALLBACK = (
+    "inject", "detect", "replan", "retune", "requeue", "failover", "recover",
+    "evict", "join", "leave", "resize", "catchup", "timeout", "shed",
+    "reship", "reroute", "serve_failover", "degrade")
+
+
+def _incident_kinds() -> frozenset:
+    try:
+        from repro.core.chaos import IncidentLog
+        return frozenset(IncidentLog.KINDS)
+    except Exception:
+        return frozenset(_INCIDENT_KINDS_FALLBACK)
 
 
 def _template(expr: ast.AST) -> Optional[str]:
@@ -331,6 +348,7 @@ def _template_ok(tpl: str) -> bool:
 
 def rule_r4(ctx: ModuleContext) -> list[Finding]:
     out: list[Finding] = []
+    kinds = _incident_kinds()
     for node in ast.walk(ctx.tree):
         if not isinstance(node, ast.Call):
             continue
@@ -338,6 +356,18 @@ def rule_r4(ctx: ModuleContext) -> list[Finding]:
         fn = node.func
         callee = fn.attr if isinstance(fn, ast.Attribute) else (
             fn.id if isinstance(fn, ast.Name) else None)
+        if (isinstance(fn, ast.Attribute) and fn.attr == "add"
+                and len(node.args) >= 3
+                and isinstance(node.args[1], ast.Constant)
+                and isinstance(node.args[1].value, str)
+                and node.args[1].value not in kinds):
+            out.append(Finding(
+                "R4", ctx.relpath, node.args[1].lineno,
+                f"incident kind literal {node.args[1].value!r} is not in the "
+                f"IncidentLog vocabulary",
+                "IncidentLog.add kinds must come from IncidentLog.KINDS "
+                "(misspelled kinds raise at runtime only when the code path "
+                "fires) — see docs/lint.md#r4"))
         if callee in _TEL_CALLS and node.args:
             key_exprs.append(node.args[0])
         for kw in node.keywords:
